@@ -1,0 +1,69 @@
+"""Table XII — per-decision inference latency of each scheduler.
+
+Wall-clocks one scheduling decision (state -> action) per algorithm on this
+host. The paper's ordering (Greedy > EAT > EAT-A > EAT-DA ~ PPO > Random ~
+meta-heuristics ~ 0) comes from: Greedy enumerates candidate futures, the
+diffusion policies run the T=10 denoise chain, the attention encoder adds a
+little on top of the MLP encoder, and the precomputed-sequence methods do no
+inference at all.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import agent as AG
+from repro.core import baselines as BL
+from repro.core import env as EV
+from repro.core import ppo as PPO
+from repro.core import sac as SAC
+from repro.core.workload import TraceConfig, make_trace
+
+
+def _time_fn(fn, iters: int = 50) -> float:
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def run(verbose: bool = True, num_servers: int = 4) -> Dict[str, float]:
+    ecfg = EV.EnvConfig(num_servers=num_servers)
+    trace = make_trace(jax.random.PRNGKey(0),
+                       TraceConfig(max_servers=num_servers))
+    state = EV.reset(ecfg)
+    obs = EV.observe(ecfg, trace, state)
+    key = jax.random.PRNGKey(1)
+    out: Dict[str, float] = {}
+
+    for variant in ("eat", "eat-a", "eat-d", "eat-da"):
+        acfg = AG.AgentConfig(variant=variant)
+        params = AG.init_actor(jax.random.PRNGKey(2), ecfg, acfg)
+        out[variant] = _time_fn(lambda: jax.block_until_ready(
+            SAC.policy_act(params, obs, key, ecfg=ecfg, acfg=acfg)))
+
+    st = PPO.init_ppo(jax.random.PRNGKey(3), ecfg)
+    out["ppo"] = _time_fn(lambda: jax.block_until_ready(
+        PPO.ppo_act(st.params, obs, key, ecfg=ecfg)[0]))
+
+    out["greedy"] = _time_fn(lambda: jax.block_until_ready(
+        BL.greedy_act(ecfg, trace, state)))
+    out["random"] = _time_fn(lambda: jax.block_until_ready(
+        BL.random_policy(key, ecfg)))
+    out["genetic"] = 0.0   # precomputed sequence: no run-time inference
+    out["harmony"] = 0.0
+
+    if verbose:
+        print("Table XII — scheduler decision latency (s/decision)")
+        for k in ("greedy", "eat", "eat-a", "eat-d", "eat-da", "ppo",
+                  "random", "genetic", "harmony"):
+            print(f"| {k:8s} | {out[k]:.2e} |")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,224 @@
+"""Shared infrastructure for the paper-table benchmarks.
+
+Trains/evaluates every scheduling algorithm (EAT + ablations, PPO,
+meta-heuristics, Random, Greedy) on the simulated edge cluster and caches
+per-(algo, servers, rate) metrics under ``artifacts/scheduling/`` so the
+table benchmarks (IX quality, X latency, XI reload) share one set of runs.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import agent as AG
+from repro.core import baselines as BL
+from repro.core import env as EV
+from repro.core import ppo as PPO
+from repro.core import sac as SAC
+from repro.core.workload import TraceConfig, make_trace, paper_rate_for
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+SCHED_DIR = os.path.join(ART, "scheduling")
+
+DRL_ALGOS = ("eat", "eat-a", "eat-d", "eat-da", "ppo")
+ALL_ALGOS = DRL_ALGOS + ("greedy", "random", "genetic", "harmony")
+
+# paper cluster configs: servers -> arrival-rate sweep (Tables IX-XI)
+PAPER_GRID = {
+    4: (0.01, 0.03, 0.05, 0.07, 0.09),
+    8: (0.06, 0.08, 0.10, 0.12, 0.14),
+    12: (0.11, 0.13, 0.15, 0.17, 0.19),
+}
+
+
+def make_env_cfg(num_servers: int) -> EV.EnvConfig:
+    return EV.EnvConfig(num_servers=num_servers, queue_window=8,
+                        s_min=10, s_max=50, max_tasks=32,
+                        time_limit=1024.0, max_steps=1024)
+
+
+def make_trace_cfg(num_servers: int, rate: float) -> TraceConfig:
+    return TraceConfig(num_tasks=32, arrival_rate=rate,
+                       max_servers=num_servers)
+
+
+def trace_fn_for(num_servers: int, rate: float) -> Callable:
+    tc = make_trace_cfg(num_servers, rate)
+    return lambda key: make_trace(key, tc)
+
+
+def eval_traces(num_servers: int, rate: float, n: int = 5, seed0: int = 10_000):
+    fn = trace_fn_for(num_servers, rate)
+    return [fn(jax.random.PRNGKey(seed0 + i)) for i in range(n)]
+
+
+# ----------------------------------------------------------------------
+# training (cached in-process; trained once per (algo, servers))
+_TRAINED: Dict = {}
+
+
+def train_drl(algo: str, num_servers: int, episodes: int, seed: int = 0,
+              log_every: int = 0):
+    """Train a DRL variant at the paper's per-cluster rate. Returns an
+    act(key, state, obs)->env-action callable."""
+    cache_key = (algo, num_servers, episodes, seed)
+    if cache_key in _TRAINED:
+        return _TRAINED[cache_key]
+    ecfg = make_env_cfg(num_servers)
+    rate = paper_rate_for(num_servers)
+    tfn = trace_fn_for(num_servers, rate)
+    if algo == "ppo":
+        st, hist = PPO.train_ppo(ecfg, PPO.PPOConfig(), tfn, episodes,
+                                 seed=seed, log_every=log_every)
+
+        def act(key, state, obs, _st=st, _ecfg=ecfg):
+            a, _, _ = PPO.ppo_act(_st.params, obs, key, ecfg=_ecfg)
+            return AG.to_env_action(a)
+    else:
+        acfg = AG.AgentConfig(variant=algo)
+        scfg = SAC.SACConfig(batch_size=128, warmup_steps=192, update_every=2)
+        ts, hist = SAC.train(ecfg, acfg, scfg, tfn, episodes, seed=seed,
+                             log_every=log_every)
+
+        def act(key, state, obs, _ts=ts, _ecfg=ecfg, _acfg=acfg):
+            a = SAC.policy_act(_ts.actor, obs, key, ecfg=_ecfg, acfg=_acfg,
+                               deterministic=True)
+            return AG.to_env_action(a)
+    _TRAINED[cache_key] = (act, hist)
+    return act, hist
+
+
+# ----------------------------------------------------------------------
+def evaluate_algo(algo: str, num_servers: int, rate: float, *,
+                  episodes: int, n_eval: int = 5, seed: int = 0) -> Dict:
+    """Average episode metrics for one algorithm at one (servers, rate)."""
+    ecfg = make_env_cfg(num_servers)
+    traces = eval_traces(num_servers, rate, n_eval)
+    per_ep: List[Dict] = []
+
+    if algo in ("eat", "eat-a", "eat-d", "eat-da", "ppo"):
+        act, _ = train_drl(algo, num_servers, episodes, seed=seed)
+        for i, tr in enumerate(traces):
+            m = BL.evaluate_policy(
+                ecfg, tr, lambda k, s, o: act(k, s, o),
+                jax.random.PRNGKey(777 + i))
+            per_ep.append(m)
+    elif algo == "random":
+        for i, tr in enumerate(traces):
+            m = BL.evaluate_policy(
+                ecfg, tr,
+                lambda k, s, o: BL.random_policy(k, ecfg),
+                jax.random.PRNGKey(777 + i))
+            per_ep.append(m)
+    elif algo == "greedy":
+        for i, tr in enumerate(traces):
+            m = BL.evaluate_policy(
+                ecfg, tr,
+                lambda k, s, o, _tr=tr: BL.greedy_act(ecfg, _tr, s),
+                jax.random.PRNGKey(777 + i))
+            per_ep.append(m)
+    elif algo in ("genetic", "harmony"):
+        # meta-heuristics optimise a fixed sequence on a *training* trace
+        # (no run-time feedback, as the paper describes), then replay it on
+        # the evaluation traces.
+        opt_trace = trace_fn_for(num_servers, rate)(jax.random.PRNGKey(3))
+        if algo == "genetic":
+            gcfg = BL.GeneticConfig(seq_len=512, generations=12, population=32)
+            seq, _ = BL.genetic_schedule(jax.random.PRNGKey(seed), ecfg,
+                                         opt_trace, gcfg)
+        else:
+            hcfg = BL.HarmonyConfig(seq_len=512, improvisations=32,
+                                    memory_size=32)
+            seq, _ = BL.harmony_schedule(jax.random.PRNGKey(seed), ecfg,
+                                         opt_trace, hcfg)
+        for tr in traces:
+            ret, fstate = BL.rollout_sequence(ecfg, tr, seq)
+            m = {k: float(v)
+                 for k, v in EV.episode_metrics(ecfg, tr, fstate).items()}
+            m.update(episode_return=float(ret), episode_len=len(seq))
+            per_ep.append(m)
+    else:
+        raise ValueError(f"unknown algo {algo!r}")
+
+    keys = per_ep[0].keys()
+    out = {k: float(np.mean([m[k] for m in per_ep])) for k in keys}
+    out.update(algo=algo, servers=num_servers, rate=rate, n_eval=n_eval)
+    return out
+
+
+# ----------------------------------------------------------------------
+def cache_path(algo: str, servers: int, rate: float) -> str:
+    return os.path.join(SCHED_DIR, f"{algo}__{servers}__{rate:.2f}.json")
+
+
+def run_grid(algos=ALL_ALGOS, grid: Optional[Dict] = None, *,
+             episodes: int = 40, n_eval: int = 5, force: bool = False,
+             verbose: bool = True) -> List[Dict]:
+    """Populate the artifact cache for every (algo, servers, rate) cell."""
+    os.makedirs(SCHED_DIR, exist_ok=True)
+    grid = grid or PAPER_GRID
+    results = []
+    for servers, rates in grid.items():
+        for algo in algos:
+            for rate in rates:
+                p = cache_path(algo, servers, rate)
+                if os.path.exists(p) and not force:
+                    with open(p) as f:
+                        results.append(json.load(f))
+                    continue
+                t0 = time.time()
+                m = evaluate_algo(algo, servers, rate, episodes=episodes,
+                                  n_eval=n_eval)
+                m["wall_s"] = round(time.time() - t0, 1)
+                with open(p, "w") as f:
+                    json.dump(m, f, indent=1)
+                results.append(m)
+                if verbose:
+                    print(f"[{algo:8s} E={servers:2d} rate={rate:.2f}] "
+                          f"q={m['avg_quality']:.3f} "
+                          f"resp={m['avg_response']:7.1f} "
+                          f"reload={m['reload_rate']:.3f} "
+                          f"({m['wall_s']}s)", flush=True)
+    return results
+
+
+def load_grid() -> List[Dict]:
+    out = []
+    if not os.path.isdir(SCHED_DIR):
+        return out
+    for fn in sorted(os.listdir(SCHED_DIR)):
+        if fn.endswith(".json"):
+            with open(os.path.join(SCHED_DIR, fn)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def format_table(results: List[Dict], metric: str, fmt: str = "{:.3f}") -> str:
+    """Paper-style table: rows = algos, columns = (servers, rate)."""
+    cells = {}
+    cols = []
+    for r in results:
+        col = (r["servers"], r["rate"])
+        if col not in cols:
+            cols.append(col)
+        cells[(r["algo"], col)] = r.get(metric)
+    cols.sort()
+    algos = [a for a in ALL_ALGOS
+             if any((a, c) in cells for c in cols)]
+    head = "| Algorithm | " + " | ".join(f"{s}N@{r:.2f}" for s, r in cols) + " |"
+    sep = "|" + "---|" * (len(cols) + 1)
+    lines = [head, sep]
+    for a in algos:
+        row = [f"| {a:8s} "]
+        for c in cols:
+            v = cells.get((a, c))
+            row.append("| " + (fmt.format(v) if v is not None else "-") + " ")
+        lines.append("".join(row) + "|")
+    return "\n".join(lines)

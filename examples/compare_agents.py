@@ -1,0 +1,70 @@
+"""Fig. 5 — training curves of the DRL schedulers (EAT vs ablations vs PPO).
+
+    PYTHONPATH=src python examples/compare_agents.py --episodes 15 \
+        --servers 8 --variants eat,eat-da,ppo
+
+Trains each variant on the 8-server simulated cluster at the paper's
+arrival rate and dumps reward / episode-length curves to
+``artifacts/training_curves.json`` (paper Fig. 5a/5c: EAT trends above the
+ablations; Fig. 5b: diffusion-policy variants converge to shorter episodes).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.core import agent as AG
+from repro.core import ppo as PPO
+from repro.core import sac as SAC
+from repro.core.env import EnvConfig
+from repro.core.workload import TraceConfig, make_trace, paper_rate_for
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=15)
+    ap.add_argument("--servers", type=int, default=8)
+    ap.add_argument("--variants", default="eat,eat-a,eat-d,eat-da,ppo")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="artifacts/training_curves.json")
+    args = ap.parse_args()
+
+    ecfg = EnvConfig(num_servers=args.servers)
+    rate = paper_rate_for(args.servers)
+    tc = TraceConfig(arrival_rate=rate, max_servers=args.servers)
+    trace_fn = lambda key: make_trace(key, tc)  # noqa: E731
+
+    curves = {}
+    for variant in args.variants.split(","):
+        print(f"=== training {variant} ({args.episodes} episodes, "
+              f"{args.servers} servers, rate {rate}) ===")
+        if variant == "ppo":
+            _, hist = PPO.train_ppo(ecfg, PPO.PPOConfig(), trace_fn,
+                                    args.episodes, seed=args.seed,
+                                    log_every=5)
+        else:
+            acfg = AG.AgentConfig(variant=variant)
+            scfg = SAC.SACConfig(batch_size=128, warmup_steps=192,
+                                 update_every=2)
+            _, hist = SAC.train(ecfg, acfg, scfg, trace_fn, args.episodes,
+                                seed=args.seed, log_every=5)
+        curves[variant] = hist
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(curves, f, indent=1)
+
+    print(f"\ncurves -> {args.out}")
+    print(f"{'variant':8s} {'first-3 R':>10s} {'last-3 R':>10s} "
+          f"{'last-3 len':>10s} {'resp':>8s}")
+    for v, hist in curves.items():
+        f3 = sum(h["episode_return"] for h in hist[:3]) / min(3, len(hist))
+        l3 = sum(h["episode_return"] for h in hist[-3:]) / min(3, len(hist))
+        ln = sum(h["episode_len"] for h in hist[-3:]) / min(3, len(hist))
+        rs = sum(h["avg_response"] for h in hist[-3:]) / min(3, len(hist))
+        print(f"{v:8s} {f3:10.1f} {l3:10.1f} {ln:10.0f} {rs:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

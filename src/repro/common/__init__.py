@@ -1,0 +1,1 @@
+from repro.common.config import ArchConfig, MoEConfig, SSMConfig, get_config, list_configs, register, ASSIGNED_ARCHS  # noqa: F401

@@ -1,0 +1,62 @@
+"""Minimal pytree checkpointing (npz-based; no orbax available offline).
+
+Layout: <dir>/<step>/arrays.npz + treedef.json (path list). Atomic-ish via
+tmp rename. Used by both the LM trainer and the RL trainer.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.common.pytree import tree_paths
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = tree_paths(tree)
+    flat = {k: np.asarray(v) for k, v in flat.items()}
+    treedef = jax.tree_util.tree_structure(tree)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "treedef.json"), "w") as f:
+            json.dump({"step": step, "treedef": str(treedef), "keys": sorted(flat)}, f)
+        final = os.path.join(directory, str(step))
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d) for d in os.listdir(directory) if d.isdigit()]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, target: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure of `target` (shapes must match)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    data = np.load(os.path.join(directory, str(step), "arrays.npz"))
+    flat_target = tree_paths(target)
+    leaves = []
+    for k in flat_target:
+        if k not in data:
+            raise KeyError(f"checkpoint missing key {k}")
+        leaves.append(data[k])
+    treedef = jax.tree_util.tree_structure(target)
+    ordered_keys = list(flat_target.keys())
+    return jax.tree_util.tree_unflatten(treedef, [data[k] for k in ordered_keys])

@@ -1,0 +1,89 @@
+"""Parameter pytree helpers: init, counting, dtype casting, tree paths."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict of jnp arrays
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_cast, params)
+
+
+def tree_paths(params: Params) -> Dict[str, Any]:
+    """Flatten to {'a/b/c': leaf} path dict (for partition-rule matching)."""
+    out = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        out["/".join(keys)] = leaf
+    return out
+
+
+def map_with_paths(fn: Callable[[str, Any], Any], params: Params) -> Params:
+    """tree_map with 'a/b/c' path string passed to fn."""
+    def _fn(path, leaf):
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        return fn("/".join(keys), leaf)
+    return jax.tree_util.tree_map_with_path(_fn, params)
+
+
+# ------------------------------------------------------------------
+# initializers (functional, explicit rng splitting)
+def normal_init(key, shape, dtype=jnp.float32, stddev=0.02):
+    return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+
+def lecun_init(key, shape, dtype=jnp.float32, fan_in_axis=-2):
+    fan_in = shape[fan_in_axis] if len(shape) >= 2 else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (std * jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Stateful convenience splitter for init code (host-side only)."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub

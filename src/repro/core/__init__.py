@@ -1,0 +1,4 @@
+# EAT: QoS-aware edge-collaborative AIGC task scheduling (the paper's core).
+from repro.core.env import EnvConfig, EnvState, reset, step, observe, episode_metrics  # noqa: F401
+from repro.core.agent import AgentConfig, VARIANTS  # noqa: F401
+from repro.core.sac import SACConfig, train, init_train_state  # noqa: F401

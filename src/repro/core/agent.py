@@ -1,0 +1,112 @@
+"""Actor/critic construction for EAT and its ablations.
+
+Variant table (paper §VI.A.3):
+    EAT     = attention encoder + diffusion policy
+    EAT-A   = mlp encoder       + diffusion policy   (no attention)
+    EAT-D   = attention encoder + gaussian policy    (no diffusion)
+    EAT-DA  = mlp encoder       + gaussian policy    (vanilla SAC)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import KeyGen, normal_init
+from repro.core import diffusion as DF
+from repro.core.env import EnvConfig
+from repro.core.networks import init_mlp, make_encoder, mlp_apply
+from repro.models.layers import mish
+
+VARIANTS = {
+    "eat": ("attention", "diffusion"),
+    "eat-a": ("mlp", "diffusion"),
+    "eat-d": ("attention", "gaussian"),
+    "eat-da": ("mlp", "gaussian"),
+}
+
+
+@dataclass(frozen=True)
+class AgentConfig:
+    variant: str = "eat"
+    T: int = 10                   # diffusion denoising steps (Table VIII)
+    hidden: int = 256
+    d_attn: int = 32
+    entropy_alpha: float = 0.05
+    log_sigma_min: float = -5.0
+    log_sigma_max: float = 1.0
+
+    @property
+    def encoder(self) -> str:
+        return VARIANTS[self.variant][0]
+
+    @property
+    def policy(self) -> str:
+        return VARIANTS[self.variant][1]
+
+
+def init_actor(key, ecfg: EnvConfig, acfg: AgentConfig) -> Dict:
+    kg = KeyGen(key)
+    enc_params, _, feat_dim = make_encoder(acfg.encoder, kg(), ecfg.obs_shape,
+                                           acfg.d_attn)
+    a_dim = ecfg.action_dim
+    p = {"enc": enc_params,
+         "sigma_head": {"w": normal_init(kg(), (a_dim, a_dim), stddev=0.01),
+                        "b": jnp.full((a_dim,), -2.0)}}
+    if acfg.policy == "diffusion":
+        p["denoiser"] = DF.init_denoiser(kg(), a_dim, feat_dim, acfg.hidden)
+    else:
+        p["mlp"] = init_mlp(kg(), [feat_dim, acfg.hidden, acfg.hidden, a_dim])
+    return p
+
+
+def _encode(params, acfg: AgentConfig, ecfg: EnvConfig, obs):
+    from repro.core.networks import attention_encode, mlp_encode
+    if acfg.encoder == "attention":
+        return attention_encode(params["enc"], obs)
+    return mlp_encode(params["enc"], obs)
+
+
+def actor_mean(params, acfg: AgentConfig, ecfg: EnvConfig, sched, obs, key):
+    """Action mean x_0 in [-1, 1]. obs: (..., 3, E+l)."""
+    f_s = _encode(params, acfg, ecfg, obs)
+    if acfg.policy == "diffusion":
+        return DF.reverse_sample(params["denoiser"], sched, f_s, key,
+                                 ecfg.action_dim), f_s
+    return jnp.tanh(mlp_apply(params["mlp"], f_s, activation=mish)), f_s
+
+
+def actor_sample(params, acfg: AgentConfig, ecfg: EnvConfig, sched, obs, key,
+                 deterministic: bool = False):
+    """Sample action (Eq. 13). Returns (action [-1,1], mean, log_sigma, entropy)."""
+    kd, ks = jax.random.split(key)
+    mean, _ = actor_mean(params, acfg, ecfg, sched, obs, kd)
+    log_sigma = jnp.clip(mean @ params["sigma_head"]["w"] + params["sigma_head"]["b"],
+                         acfg.log_sigma_min, acfg.log_sigma_max)
+    sigma = jnp.exp(log_sigma)
+    eps = jax.random.normal(ks, mean.shape)
+    a = mean if deterministic else mean + sigma * eps
+    a = jnp.clip(a, -1.0, 1.0)
+    # Gaussian entropy (Eq. 14), no tanh correction (paper)
+    entropy = 0.5 * jnp.sum(jnp.log(2 * jnp.pi * jnp.e) + 2 * log_sigma, axis=-1)
+    return a, mean, log_sigma, entropy
+
+
+def to_env_action(a):
+    """[-1, 1] -> [0, 1] (the env's native action range)."""
+    return (a + 1.0) * 0.5
+
+
+# ----------------------------------------------------------------------
+# critics (paper Table VII: 2 x 256 FC, Mish)
+def init_critic(key, ecfg: EnvConfig, hidden: int = 256) -> Dict:
+    obs_dim = ecfg.obs_shape[0] * ecfg.obs_shape[1]
+    return init_mlp(key, [obs_dim + ecfg.action_dim, hidden, hidden, 1])
+
+
+def critic_apply(params, obs, action):
+    flat = obs.reshape(obs.shape[:-2] + (-1,))
+    x = jnp.concatenate([flat, action], axis=-1)
+    return mlp_apply(params, x, activation=mish)[..., 0]

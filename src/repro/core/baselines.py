@@ -1,0 +1,175 @@
+"""Non-learned baselines (paper §VI.A.3): Random, Greedy, Genetic, Harmony.
+
+* Random: uniform action vector, keeps the Task/Server selector machinery.
+* Greedy: enumerates (visible task x step grid) candidate actions plus no-op,
+  simulates each with the jittable env step (vmap) and takes the best
+  immediate reward — the paper notes this maximises steps/quality.
+* Genetic / Harmony: meta-heuristics that optimise a fixed 2048-step action
+  *sequence* (pre-computed, no environment feedback at run time, as the paper
+  describes) with episode return as fitness, evaluated by a lax.scan rollout.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import env as EV
+
+
+# ----------------------------------------------------------------------
+def random_policy(key, ecfg: EV.EnvConfig):
+    return jax.random.uniform(key, (ecfg.action_dim,))
+
+
+# ----------------------------------------------------------------------
+def _candidate_actions(ecfg: EV.EnvConfig, n_steps: int = 9) -> jnp.ndarray:
+    """(1 + l*n_steps, action_dim) candidates in env space [0,1]."""
+    l = ecfg.queue_window
+    acts = [jnp.full((ecfg.action_dim,), 0.9)]           # no-op (a_c > 0.5)
+    step_grid = jnp.linspace(0.0, 1.0, n_steps)
+    for slot in range(l):
+        for s in step_grid:
+            a = jnp.zeros((ecfg.action_dim,))            # a_c = 0 -> execute
+            a = a.at[1].set(s)
+            a = a.at[2 + slot].set(1.0)
+            acts.append(a)
+    return jnp.stack(acts)
+
+
+@functools.partial(jax.jit, static_argnames=("ecfg",))
+def greedy_act(ecfg: EV.EnvConfig, trace: Dict, state: EV.EnvState):
+    cands = _candidate_actions(ecfg)
+    def eval_a(a):
+        _, _, r, _, info = EV.step(ecfg, trace, state, a)
+        return r + jnp.where(info["scheduled"], 1e-6, 0.0)
+    rewards = jax.vmap(eval_a)(cands)
+    return cands[jnp.argmax(rewards)]
+
+
+# ----------------------------------------------------------------------
+# sequence rollout for meta-heuristics
+@functools.partial(jax.jit, static_argnames=("ecfg",))
+def rollout_sequence(ecfg: EV.EnvConfig, trace: Dict, seq: jnp.ndarray):
+    """seq: (T, action_dim) in [0,1]. Returns (return, final_state)."""
+    state0 = EV.reset(ecfg)
+
+    def body(carry, a):
+        state, total, done = carry
+        new_state, _, r, d, _ = EV.step(ecfg, trace, state, a)
+        # freeze once done
+        state = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(done, o, n), new_state, state)
+        total = total + jnp.where(done, 0.0, r)
+        return (state, total, done | d), None
+
+    (state, total, _), _ = jax.lax.scan(
+        body, (state0, jnp.zeros(()), jnp.zeros((), bool)), seq)
+    return total, state
+
+
+@dataclass(frozen=True)
+class GeneticConfig:
+    population: int = 64
+    generations: int = 32
+    parents: int = 10
+    crossover_prob: float = 1.0
+    mutation_prob: float = 0.1
+    elites: int = 1
+    seq_len: int = 2048
+
+
+def genetic_schedule(key, ecfg: EV.EnvConfig, trace: Dict,
+                     gcfg: GeneticConfig = GeneticConfig()):
+    """Returns (best action sequence, best fitness)."""
+    A = ecfg.action_dim
+    T = gcfg.seq_len
+    rollout = jax.vmap(lambda s: rollout_sequence(ecfg, trace, s)[0])
+    key, k0 = jax.random.split(key)
+    pop = jax.random.uniform(k0, (gcfg.population, T, A))
+
+    for _gen in range(gcfg.generations):
+        fit = rollout(pop)
+        order = jnp.argsort(-fit)
+        pop = pop[order]
+        fit = fit[order]
+        parents = pop[: gcfg.parents]
+        key, kc, kp1, kp2, km, kmv = jax.random.split(key, 5 + 1)[:6]
+        n_child = gcfg.population - gcfg.elites
+        i1 = jax.random.randint(kp1, (n_child,), 0, gcfg.parents)
+        i2 = jax.random.randint(kp2, (n_child,), 0, gcfg.parents)
+        xmask = jax.random.bernoulli(kc, 0.5, (n_child, T, A))
+        children = jnp.where(xmask, parents[i1], parents[i2])
+        mmask = jax.random.bernoulli(km, gcfg.mutation_prob, (n_child, T, A))
+        children = jnp.where(mmask, jax.random.uniform(kmv, (n_child, T, A)),
+                             children)
+        pop = jnp.concatenate([pop[: gcfg.elites], children])
+    fit = rollout(pop)
+    best = jnp.argmax(fit)
+    return pop[best], fit[best]
+
+
+@dataclass(frozen=True)
+class HarmonyConfig:
+    memory_size: int = 64
+    improvisations: int = 64
+    hmcr: float = 0.8            # memory consideration
+    par: float = 0.2             # pitch adjustment
+    bandwidth: float = 0.05      # continuous-action pitch bandwidth
+    seq_len: int = 2048
+
+
+def harmony_schedule(key, ecfg: EV.EnvConfig, trace: Dict,
+                     hcfg: HarmonyConfig = HarmonyConfig()):
+    A = ecfg.action_dim
+    T = hcfg.seq_len
+    rollout = jax.vmap(lambda s: rollout_sequence(ecfg, trace, s)[0])
+    key, k0 = jax.random.split(key)
+    memory = jax.random.uniform(k0, (hcfg.memory_size, T, A))
+    fit = rollout(memory)
+
+    for _ in range(hcfg.improvisations):
+        key, km, kr, kp, kb, kn = jax.random.split(key, 6)
+        pick = jax.random.randint(km, (T, A), 0, hcfg.memory_size)
+        from_mem = memory[pick, jnp.arange(T)[:, None], jnp.arange(A)[None, :]]
+        use_mem = jax.random.bernoulli(kr, hcfg.hmcr, (T, A))
+        rand = jax.random.uniform(kn, (T, A))
+        new = jnp.where(use_mem, from_mem, rand)
+        adj = jax.random.bernoulli(kp, hcfg.par, (T, A))
+        new = jnp.where(adj & use_mem,
+                        jnp.clip(new + hcfg.bandwidth *
+                                 jax.random.uniform(kb, (T, A), minval=-1.0,
+                                                    maxval=1.0), 0, 1),
+                        new)
+        f_new = rollout_sequence(ecfg, trace, new)[0]
+        worst = jnp.argmin(fit)
+        better = f_new > fit[worst]
+        memory = memory.at[worst].set(jnp.where(better, new, memory[worst]))
+        fit = fit.at[worst].set(jnp.where(better, f_new, fit[worst]))
+    best = jnp.argmax(fit)
+    return memory[best], fit[best]
+
+
+# ----------------------------------------------------------------------
+def evaluate_policy(ecfg: EV.EnvConfig, trace: Dict, act_fn, key,
+                    max_steps: int = 4096) -> Dict:
+    """Generic host-loop evaluation for random/greedy-style policies.
+    act_fn(key, state, obs) -> action in [0,1]^A."""
+    step_jit = jax.jit(lambda s, a: EV.step(ecfg, trace, s, a))
+    state = EV.reset(ecfg)
+    obs = EV.observe(ecfg, trace, state)
+    total, done, n = 0.0, False, 0
+    while not done and n < max_steps:
+        key, ka = jax.random.split(key)
+        a = act_fn(ka, state, obs)
+        state, obs, r, d, _ = step_jit(state, a)
+        total += float(r)
+        done = bool(d)
+        n += 1
+    m = {k: float(v) for k, v in EV.episode_metrics(ecfg, trace, state).items()}
+    m.update(episode_return=total, episode_len=n)
+    return m

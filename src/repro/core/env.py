@@ -1,0 +1,271 @@
+"""Jittable edge-cluster gang-scheduling environment (paper §IV–V.A).
+
+The MDP is event-driven: a decision is taken whenever the agent acts; if the
+agent schedules a task, time stays put (more tasks can gang-schedule onto the
+remaining idle servers at the same instant); otherwise time advances to the
+next event (task arrival or server completion).
+
+State (Eq. 6): a 3 x (E + l) matrix
+    [ a_e ... | wait_k ... ]
+    [ t^r_e...| c_k    ... ]
+    [ d_e ... | m_k/0  ... ]
+Action (Eq. 8): [a_c, a_s, a_k1..a_kl] in [0, 1]^(2+l)
+    a_c <= 0.5 -> schedule; a_s -> inference steps in [S_min, S_max];
+    a_k -> per-visible-task preference scores.
+Reward: R = alpha_q q - lambda_q I + 1 / (beta_t t_r + mu_t t_avg_wait).
+
+Model reuse: servers remember the gang (leader = task id), gang size and
+model of the last task they served; a new task reuses iff a *complete* idle
+gang with matching model and size c_k exists (the DistriFusion process group
+can be reused without reloading). Server selection otherwise greedily avoids
+fragmenting intact idle gangs (paper §V.B.4).
+
+Everything is fixed-shape jnp, so the env jits, vmaps (batched rollouts) and
+is differentiable-free (used under lax.scan in the meta-heuristic baselines).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quality as Q
+from repro.core import timemodel as TM
+
+INF = jnp.float32(1e30)
+
+
+@dataclass(frozen=True)
+class EnvConfig:
+    num_servers: int = 8
+    queue_window: int = 8              # l: visible queue slots
+    s_min: int = 10
+    s_max: int = 50
+    max_tasks: int = 32                # K per episode
+    time_limit: float = 1024.0
+    max_steps: int = 1024              # decision-step limit
+    # reward coefficients (Eq. 4a / reward R_t)
+    alpha_q: float = 10.0
+    beta_t: float = 0.1
+    mu_t: float = 0.1
+    # numerator of the reciprocal time term. The paper leaves the weight
+    # coefficients unspecified; k_time = 10 balances d(reward)/d(steps) so
+    # the learned policy lands on interior step counts (~17-25, as in the
+    # paper's Table II) instead of saturating at S_max (see DESIGN.md §6).
+    k_time: float = 10.0
+    lambda_q: float = 1.0
+    p_quality: float = 2.0
+    q_min: float = 0.23
+    # observation scaling
+    time_scale: float = 60.0
+    num_models: int = 1                # distinct services; 1 = paper's SD-only
+    # per-model execution-time scale (len num_models); defaults to ones
+    model_scale: Tuple[float, ...] = ()
+
+    @property
+    def action_dim(self) -> int:
+        return 2 + self.queue_window
+
+    @property
+    def obs_shape(self) -> Tuple[int, int]:
+        return (3, self.num_servers + self.queue_window)
+
+    def scales(self):
+        if self.model_scale:
+            return jnp.asarray(self.model_scale, jnp.float32)
+        return jnp.ones((self.num_models,), jnp.float32)
+
+
+class EnvState(NamedTuple):
+    time: jnp.ndarray            # () f32
+    server_free_at: jnp.ndarray  # (E,) f32 absolute
+    server_model: jnp.ndarray    # (E,) i32, -1 = none
+    server_gang: jnp.ndarray     # (E,) i32 task-id of last gang, -1 = none
+    server_gang_size: jnp.ndarray  # (E,) i32
+    task_status: jnp.ndarray     # (K,) i32 0=unscheduled 1=running 2=done
+    task_start: jnp.ndarray      # (K,) f32
+    task_finish: jnp.ndarray     # (K,) f32
+    task_steps: jnp.ndarray      # (K,) i32
+    task_quality: jnp.ndarray    # (K,) f32
+    task_reload: jnp.ndarray     # (K,) i32 1 = had to (re)init
+    steps_taken: jnp.ndarray     # () i32
+
+
+def reset(cfg: EnvConfig) -> EnvState:
+    E, K = cfg.num_servers, cfg.max_tasks
+    return EnvState(
+        time=jnp.zeros((), jnp.float32),
+        server_free_at=jnp.zeros((E,), jnp.float32),
+        server_model=-jnp.ones((E,), jnp.int32),
+        server_gang=-jnp.ones((E,), jnp.int32),
+        server_gang_size=jnp.zeros((E,), jnp.int32),
+        task_status=jnp.zeros((K,), jnp.int32),
+        task_start=jnp.zeros((K,), jnp.float32),
+        task_finish=jnp.zeros((K,), jnp.float32),
+        task_steps=jnp.zeros((K,), jnp.int32),
+        task_quality=jnp.zeros((K,), jnp.float32),
+        task_reload=jnp.zeros((K,), jnp.int32),
+        steps_taken=jnp.zeros((), jnp.int32),
+    )
+
+
+# ----------------------------------------------------------------------
+def _visible_queue(cfg: EnvConfig, trace: Dict, state: EnvState):
+    """Indices of the l earliest queued (arrived & unscheduled) tasks."""
+    queued = (state.task_status == 0) & (trace["arr_time"] <= state.time)
+    prio = jnp.where(queued, trace["arr_time"], INF)
+    neg, idx = jax.lax.top_k(-prio, cfg.queue_window)
+    valid = -neg < INF
+    return idx, valid, queued
+
+
+def observe(cfg: EnvConfig, trace: Dict, state: EnvState) -> jnp.ndarray:
+    """Eq.-6 state matrix, normalised."""
+    t = state.time
+    idx, valid, _ = _visible_queue(cfg, trace, state)
+    avail = (state.server_free_at <= t).astype(jnp.float32)
+    remaining = jnp.maximum(state.server_free_at - t, 0.0) / cfg.time_scale
+    model = (state.server_model.astype(jnp.float32) + 1.0) / max(cfg.num_models, 1)
+    wait = jnp.where(valid, (t - trace["arr_time"][idx]) / cfg.time_scale, 0.0)
+    c = jnp.where(valid, trace["c"][idx].astype(jnp.float32) / 8.0, 0.0)
+    if cfg.num_models > 1:
+        mrow = jnp.where(valid, (trace["model"][idx].astype(jnp.float32) + 1.0)
+                         / cfg.num_models, 0.0)
+    else:
+        mrow = jnp.zeros_like(c)   # paper zero-pads this row
+    row0 = jnp.concatenate([avail, wait])
+    row1 = jnp.concatenate([remaining, c])
+    row2 = jnp.concatenate([model, mrow])
+    return jnp.stack([row0, row1, row2])
+
+
+# ----------------------------------------------------------------------
+def _select_servers(cfg: EnvConfig, state: EnvState, idle, m_k, c_k):
+    """Returns (selected mask (E,), reuse flag). Greedy §V.B.4."""
+    E, K = cfg.num_servers, cfg.max_tasks
+    gang = jnp.clip(state.server_gang, 0, K - 1)
+    has_gang = state.server_gang >= 0
+
+    # complete reusable gang: idle, same model, gang size == c_k
+    ok = idle & has_gang & (state.server_model == m_k) & (state.server_gang_size == c_k)
+    counts = jnp.zeros((K,), jnp.int32).at[gang].add(ok.astype(jnp.int32))
+    complete = counts == c_k                                   # per gang id
+    any_reuse = jnp.any(complete & (counts > 0))
+    g_star = jnp.argmin(jnp.where(complete & (counts > 0),
+                                  jnp.arange(K), K + 1))
+    reuse_sel = ok & (gang == g_star)
+
+    # fragmentation-aware fresh selection: avoid breaking intact idle gangs
+    member_ok = idle & has_gang
+    counts_all = jnp.zeros((K,), jnp.int32).at[gang].add(member_ok.astype(jnp.int32))
+    intact = member_ok & (counts_all[gang] == state.server_gang_size) \
+        & (state.server_gang_size > 0)
+    score = jnp.where(idle,
+                      intact.astype(jnp.float32) * (100.0 + 10.0 * state.server_gang_size)
+                      + 0.001 * jnp.arange(E),
+                      INF)
+    order = jnp.argsort(score)
+    rank = jnp.zeros((E,), jnp.int32).at[order].set(jnp.arange(E, dtype=jnp.int32))
+    fresh_sel = idle & (rank < c_k)
+
+    sel = jnp.where(any_reuse, reuse_sel, fresh_sel)
+    return sel, any_reuse
+
+
+def step(cfg: EnvConfig, trace: Dict, state: EnvState, action: jnp.ndarray):
+    """One decision. Returns (state', obs', reward, done, info)."""
+    t = state.time
+    # lazily retire finished tasks
+    finished = (state.task_status == 1) & (state.task_finish <= t)
+    status = jnp.where(finished, 2, state.task_status)
+    state = state._replace(task_status=status)
+
+    idx, valid, queued = _visible_queue(cfg, trace, state)
+    scores = jnp.where(valid, action[2:], -INF)
+    slot = jnp.argmax(scores)
+    k = idx[slot]
+    k_valid = valid[slot]
+
+    want_exec = action[0] <= 0.5
+    c_k = trace["c"][k]
+    m_k = trace["model"][k]
+    scale = cfg.scales()[m_k]
+    idle = state.server_free_at <= t
+    n_idle = jnp.sum(idle.astype(jnp.int32))
+    feasible = want_exec & k_valid & (n_idle >= c_k)
+
+    sel, reuse = _select_servers(cfg, state, idle, m_k, c_k)
+    steps = jnp.round(cfg.s_min + jnp.clip(action[1], 0.0, 1.0)
+                      * (cfg.s_max - cfg.s_min)).astype(jnp.int32)
+    t_exec = TM.exec_time(c_k, steps, scale)
+    t_init = jnp.where(reuse, 0.0, TM.init_time(c_k, scale))
+    finish = t + t_exec + t_init
+    q_k = Q.quality_of(steps, trace["noise"][k])
+    pen = Q.quality_penalty(q_k, cfg.q_min, cfg.p_quality)
+    t_resp = finish - trace["arr_time"][k]
+
+    # --- apply schedule (masked) -------------------------------------
+    f = feasible
+    sel_f = sel & f
+    new_free = jnp.where(sel_f, finish, state.server_free_at)
+    new_model = jnp.where(sel_f, m_k, state.server_model)
+    new_gang = jnp.where(sel_f, k.astype(jnp.int32), state.server_gang)
+    new_gsize = jnp.where(sel_f, c_k, state.server_gang_size)
+
+    def set_if(arr, val):
+        return arr.at[k].set(jnp.where(f, val, arr[k]))
+
+    status = set_if(state.task_status, 1)
+    start = set_if(state.task_start, t)
+    tfin = set_if(state.task_finish, finish)
+    tsteps = set_if(state.task_steps, steps)
+    tq = set_if(state.task_quality, q_k)
+    trl = set_if(state.task_reload, jnp.where(reuse, 0, 1).astype(jnp.int32))
+
+    # reward (only on successful schedule)
+    still_queued = queued & (jnp.arange(cfg.max_tasks) != k)
+    n_q = jnp.maximum(jnp.sum(still_queued.astype(jnp.float32)), 1.0)
+    t_avg = jnp.sum(jnp.where(still_queued, t - trace["arr_time"], 0.0)) / n_q
+    r = cfg.alpha_q * q_k - cfg.lambda_q * pen \
+        + cfg.k_time / (cfg.beta_t * t_resp + cfg.mu_t * t_avg + 1e-3)
+    reward = jnp.where(f, r, 0.0)
+
+    # --- advance time on no-op ----------------------------------------
+    arr = trace["arr_time"]
+    next_arrival = jnp.min(jnp.where(arr > t, arr, INF))
+    next_completion = jnp.min(jnp.where(new_free > t, new_free, INF))
+    next_event = jnp.minimum(next_arrival, next_completion)
+    t_new = jnp.where(f, t, jnp.where(next_event < INF, next_event, t + 1.0))
+
+    new_state = EnvState(
+        time=t_new, server_free_at=new_free, server_model=new_model,
+        server_gang=new_gang, server_gang_size=new_gsize,
+        task_status=status, task_start=start, task_finish=tfin,
+        task_steps=tsteps, task_quality=tq, task_reload=trl,
+        steps_taken=state.steps_taken + 1,
+    )
+    all_done = jnp.all((new_state.task_status == 2) |
+                       ((new_state.task_status == 1) & (new_state.task_finish <= t_new)))
+    done = all_done | (t_new >= cfg.time_limit) | (new_state.steps_taken >= cfg.max_steps)
+    info = {"scheduled": f, "task": k, "reuse": reuse & f, "steps": steps,
+            "quality": jnp.where(f, q_k, 0.0),
+            "response": jnp.where(f, t_resp, 0.0)}
+    return new_state, observe(cfg, trace, new_state), reward, done, info
+
+
+# ----------------------------------------------------------------------
+def episode_metrics(cfg: EnvConfig, trace: Dict, state: EnvState) -> Dict:
+    """Aggregates matching the paper's Tables IX/X/XI."""
+    sched = state.task_status >= 1
+    n = jnp.maximum(jnp.sum(sched.astype(jnp.float32)), 1.0)
+    resp = jnp.where(sched, state.task_finish - trace["arr_time"], 0.0)
+    return {
+        "num_scheduled": jnp.sum(sched.astype(jnp.int32)),
+        "num_done": jnp.sum((state.task_status == 2).astype(jnp.int32)),
+        "avg_quality": jnp.sum(jnp.where(sched, state.task_quality, 0.0)) / n,
+        "avg_response": jnp.sum(resp) / n,
+        "reload_rate": jnp.sum(jnp.where(sched, state.task_reload, 0).astype(jnp.float32)) / n,
+        "avg_steps": jnp.sum(jnp.where(sched, state.task_steps, 0).astype(jnp.float32)) / n,
+    }

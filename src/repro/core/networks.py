@@ -1,0 +1,82 @@
+"""Policy/critic networks and the attention feature extractor (paper Table VII).
+
+All hidden layers use Mish (paper §VI.A.2); feature extraction treats each
+column of the Eq.-6 state matrix as a token and applies one scaled-dot-product
+attention layer (Eq. 9), producing a feature vector f_s of dim |E| + l.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import KeyGen, normal_init
+from repro.models.layers import mish
+
+
+def init_mlp(key, dims: Sequence[int], final_bias: bool = True) -> Dict:
+    kg = KeyGen(key)
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        layers.append({"w": normal_init(kg(), (a, b), stddev=1.0 / math.sqrt(a)),
+                       "b": jnp.zeros((b,), jnp.float32)})
+    return {"layers": layers}
+
+
+def mlp_apply(p: Dict, x, activation=mish, final_activation=None):
+    n = len(p["layers"])
+    for i, l in enumerate(p["layers"]):
+        x = x @ l["w"] + l["b"]
+        if i < n - 1:
+            x = activation(x)
+        elif final_activation is not None:
+            x = final_activation(x)
+    return x
+
+
+# ----------------------------------------------------------------------
+# attention feature extractor (Eq. 9)
+def init_attention_encoder(key, n_rows: int, n_cols: int, d_attn: int = 32) -> Dict:
+    """State matrix (n_rows, n_cols): columns are tokens of dim n_rows."""
+    kg = KeyGen(key)
+    return {
+        "wq": normal_init(kg(), (n_rows, d_attn), stddev=1.0 / math.sqrt(n_rows)),
+        "wk": normal_init(kg(), (n_rows, d_attn), stddev=1.0 / math.sqrt(n_rows)),
+        "wv": normal_init(kg(), (n_rows, d_attn), stddev=1.0 / math.sqrt(n_rows)),
+        "wo": normal_init(kg(), (d_attn,), stddev=1.0 / math.sqrt(d_attn)),
+    }
+
+
+def attention_encode(p: Dict, s) -> jnp.ndarray:
+    """s: (..., 3, E+l) -> f_s: (..., E+l)."""
+    x = jnp.swapaxes(s, -1, -2)                              # (..., E+l, 3)
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    d = q.shape[-1]
+    att = jax.nn.softmax(q @ jnp.swapaxes(k, -1, -2) / math.sqrt(d), axis=-1)
+    ctx = att @ v                                            # (..., E+l, d)
+    return ctx @ p["wo"]                                     # (..., E+l)
+
+
+# MLP fallback encoder (the EAT-A / EAT-DA ablations: no attention layer)
+def init_mlp_encoder(key, n_rows: int, n_cols: int) -> Dict:
+    return init_mlp(key, [n_rows * n_cols, n_cols])
+
+
+def mlp_encode(p: Dict, s) -> jnp.ndarray:
+    flat = s.reshape(s.shape[:-2] + (-1,))
+    return mlp_apply(p, flat)
+
+
+def make_encoder(kind: str, key, obs_shape, d_attn: int = 32):
+    """Returns (params, encode_fn, feature_dim)."""
+    n_rows, n_cols = obs_shape
+    if kind == "attention":
+        return (init_attention_encoder(key, n_rows, n_cols, d_attn),
+                attention_encode, n_cols)
+    if kind == "mlp":
+        return init_mlp_encoder(key, n_rows, n_cols), mlp_encode, n_cols
+    raise ValueError(kind)

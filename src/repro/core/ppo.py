@@ -1,0 +1,171 @@
+"""PPO baseline (paper §VI.A.3, hyper-parameters from Table VIII).
+
+On-policy clipped-surrogate PPO with GAE; Gaussian MLP actor (mean = tanh
+MLP over the flattened state, learned state-independent log-sigma) and an
+MLP value head — the standard 256x256 architecture the paper compares with.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import agent as AG
+from repro.core import env as EV
+from repro.core.networks import init_mlp, mlp_apply
+from repro.models.layers import mish
+from repro.training.optimizer import (AdamState, adam_init, adam_update,
+                                      apply_updates, clip_by_global_norm)
+
+
+@dataclass(frozen=True)
+class PPOConfig:
+    lr: float = 3e-4
+    gamma: float = 0.95
+    gae_lambda: float = 0.95      # lambda_G
+    clip_eps: float = 0.2         # epsilon
+    value_coef: float = 0.5       # nu
+    entropy_coef: float = 0.01    # beta
+    max_grad_norm: float = 0.5    # g
+    rollout_len: int = 1024
+    minibatches: int = 8
+    epochs: int = 4
+
+
+class PPOState(NamedTuple):
+    params: Any
+    opt: AdamState
+    step: jnp.ndarray
+
+
+def init_ppo(key, ecfg: EV.EnvConfig) -> PPOState:
+    k1, k2, k3 = jax.random.split(key, 3)
+    obs_dim = ecfg.obs_shape[0] * ecfg.obs_shape[1]
+    params = {
+        "actor": init_mlp(k1, [obs_dim, 256, 256, ecfg.action_dim]),
+        "log_sigma": jnp.full((ecfg.action_dim,), -0.5),
+        "value": init_mlp(k2, [obs_dim, 256, 256, 1]),
+    }
+    return PPOState(params=params, opt=adam_init(params), step=jnp.zeros((), jnp.int32))
+
+
+def _dist(params, obs):
+    flat = obs.reshape(obs.shape[:-2] + (-1,))
+    mean = jnp.tanh(mlp_apply(params["actor"], flat, activation=mish))
+    return mean, params["log_sigma"]
+
+
+def _logp(mean, log_sigma, a):
+    var = jnp.exp(2 * log_sigma)
+    return jnp.sum(-0.5 * jnp.square(a - mean) / var - log_sigma
+                   - 0.5 * jnp.log(2 * jnp.pi), axis=-1)
+
+
+def value_of(params, obs):
+    flat = obs.reshape(obs.shape[:-2] + (-1,))
+    return mlp_apply(params["value"], flat, activation=mish)[..., 0]
+
+
+@functools.partial(jax.jit, static_argnames=("ecfg",))
+def ppo_act(params, obs, key, *, ecfg: EV.EnvConfig):
+    mean, log_sigma = _dist(params, obs)
+    a = mean + jnp.exp(log_sigma) * jax.random.normal(key, mean.shape)
+    a = jnp.clip(a, -1.0, 1.0)
+    return a, _logp(mean, log_sigma, a), value_of(params, obs)
+
+
+def compute_gae(rewards, values, dones, last_value, gamma, lam):
+    """numpy GAE over a rollout."""
+    T = len(rewards)
+    adv = np.zeros(T, np.float32)
+    last = 0.0
+    next_v = last_value
+    for t in reversed(range(T)):
+        nonterm = 1.0 - dones[t]
+        delta = rewards[t] + gamma * next_v * nonterm - values[t]
+        last = delta + gamma * lam * nonterm * last
+        adv[t] = last
+        next_v = values[t]
+    return adv, adv + values
+
+
+@functools.partial(jax.jit, static_argnames=("ecfg", "pcfg"))
+def ppo_update(st: PPOState, batch: Dict, *, ecfg: EV.EnvConfig, pcfg: PPOConfig):
+    def loss_fn(params):
+        mean, log_sigma = _dist(params, batch["obs"])
+        logp = _logp(mean, log_sigma, batch["action"])
+        ratio = jnp.exp(logp - batch["logp"])
+        adv = batch["adv"]
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        surr = jnp.minimum(ratio * adv,
+                           jnp.clip(ratio, 1 - pcfg.clip_eps, 1 + pcfg.clip_eps) * adv)
+        v = value_of(params, batch["obs"])
+        v_loss = jnp.mean(jnp.square(batch["ret"] - v))
+        ent = jnp.sum(log_sigma + 0.5 * jnp.log(2 * jnp.pi * jnp.e))
+        loss = -jnp.mean(surr) + pcfg.value_coef * v_loss - pcfg.entropy_coef * ent
+        return loss, (v_loss, jnp.mean(ratio))
+
+    (loss, (vl, ratio)), grads = jax.value_and_grad(loss_fn, has_aux=True)(st.params)
+    grads, gnorm = clip_by_global_norm(grads, pcfg.max_grad_norm)
+    upd, opt = adam_update(grads, st.opt, st.params, pcfg.lr)
+    params = apply_updates(st.params, upd)
+    return PPOState(params=params, opt=opt, step=st.step + 1), \
+        {"loss": loss, "value_loss": vl, "ratio": ratio, "grad_norm": gnorm}
+
+
+def train_ppo(ecfg: EV.EnvConfig, pcfg: PPOConfig, trace_fn, num_episodes: int,
+              seed: int = 0, log_every: int = 10):
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    st = init_ppo(k0, ecfg)
+    history = []
+    step_jit = jax.jit(lambda s, a, tr: EV.step(ecfg, tr, s, a))
+    rng = np.random.default_rng(seed)
+
+    for ep in range(num_episodes):
+        key, kt, ke = jax.random.split(key, 3)
+        trace = trace_fn(kt)
+        state = EV.reset(ecfg)
+        obs = EV.observe(ecfg, trace, state)
+        traj = {k: [] for k in ("obs", "action", "logp", "reward", "done", "value")}
+        done, total_r, nsteps = False, 0.0, 0
+        while not done:
+            ke, ka = jax.random.split(ke)
+            a, logp, v = ppo_act(st.params, obs, ka, ecfg=ecfg)
+            state, next_obs, r, done_arr, _ = step_jit(state, AG.to_env_action(a), trace)
+            done = bool(done_arr)
+            for k_, v_ in zip(("obs", "action", "logp", "reward", "done", "value"),
+                              (np.asarray(obs), np.asarray(a), float(logp),
+                               float(r), float(done), float(v))):
+                traj[k_].append(v_)
+            obs = next_obs
+            total_r += float(r)
+            nsteps += 1
+        # -- GAE + updates
+        rewards = np.asarray(traj["reward"], np.float32)
+        values = np.asarray(traj["value"], np.float32)
+        dones = np.asarray(traj["done"], np.float32)
+        adv, ret = compute_gae(rewards, values, dones, 0.0, pcfg.gamma,
+                               pcfg.gae_lambda)
+        data = {"obs": np.stack(traj["obs"]), "action": np.stack(traj["action"]),
+                "logp": np.asarray(traj["logp"], np.float32),
+                "adv": adv, "ret": ret}
+        n = len(rewards)
+        for _ in range(pcfg.epochs):
+            perm = rng.permutation(n)
+            mb = max(1, n // pcfg.minibatches)
+            for i in range(0, n, mb):
+                idx = perm[i:i + mb]
+                batch = {k: jnp.asarray(v[idx]) for k, v in data.items()}
+                st, m = ppo_update(st, batch, ecfg=ecfg, pcfg=pcfg)
+        em = {k: float(v) for k, v in EV.episode_metrics(ecfg, trace, state).items()}
+        em.update(episode=ep, episode_return=total_r, episode_len=nsteps)
+        history.append(em)
+        if log_every and ep % log_every == 0:
+            print(f"[ppo ep {ep:4d}] R={total_r:8.2f} len={nsteps:4d} "
+                  f"resp={em['avg_response']:7.2f} q={em['avg_quality']:.3f}")
+    return st, history

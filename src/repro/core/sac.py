@@ -1,0 +1,253 @@
+"""EAT training (paper Algorithm 2): SAC with double critics + target nets.
+
+Actor loss (Eq. 15/16): maximise min-Q(s, a_theta(s)) + alpha * H(N(mu, sigma^2)),
+with gradients flowing through the T-step diffusion chain (reparameterised).
+Critic loss (Eq. 19/20): TD toward r + gamma * min target-Q(s', a'(s')).
+Soft target update (Eq. 22) with rate tau. Hyper-parameters from Table VIII.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import agent as AG
+from repro.core import diffusion as DF
+from repro.core import env as EV
+from repro.core.replay import ReplayBuffer
+from repro.training.optimizer import AdamState, adam_init, adam_update, apply_updates
+
+
+@dataclass(frozen=True)
+class SACConfig:
+    actor_lr: float = 3e-4        # eta_a
+    critic_lr: float = 3e-4       # eta_c
+    gamma: float = 0.95
+    tau: float = 0.005
+    batch_size: int = 512
+    buffer_capacity: int = 1_000_000
+    updates_per_step: int = 1
+    update_every: int = 1         # gradient updates every N env steps
+    warmup_steps: int = 256
+    weight_decay: float = 1e-4    # lambda (Table VIII)
+    bc_coef: float = 0.0          # optional diffusion BC regulariser
+
+
+class TrainState(NamedTuple):
+    actor: Any
+    critic1: Any
+    critic2: Any
+    target1: Any
+    target2: Any
+    opt_actor: AdamState
+    opt_critic1: AdamState
+    opt_critic2: AdamState
+    step: jnp.ndarray
+
+
+def init_train_state(key, ecfg: EV.EnvConfig, acfg: AG.AgentConfig) -> TrainState:
+    k1, k2, k3 = jax.random.split(key, 3)
+    actor = AG.init_actor(k1, ecfg, acfg)
+    c1 = AG.init_critic(k2, ecfg)
+    c2 = AG.init_critic(k3, ecfg)
+    return TrainState(
+        actor=actor, critic1=c1, critic2=c2,
+        target1=jax.tree_util.tree_map(jnp.copy, c1),
+        target2=jax.tree_util.tree_map(jnp.copy, c2),
+        opt_actor=adam_init(actor), opt_critic1=adam_init(c1),
+        opt_critic2=adam_init(c2), step=jnp.zeros((), jnp.int32))
+
+
+def _soft_update(target, online, tau: float):
+    return jax.tree_util.tree_map(lambda t, o: (1 - tau) * t + tau * o, target, online)
+
+
+@functools.partial(jax.jit, static_argnames=("ecfg", "acfg", "scfg"))
+def update_step(ts: TrainState, batch: Dict, key, *, ecfg: EV.EnvConfig,
+                acfg: AG.AgentConfig, scfg: SACConfig) -> Tuple[TrainState, Dict]:
+    sched = DF.vp_schedule(acfg.T)
+    obs, act, rew = batch["obs"], batch["action"], batch["reward"]
+    nobs, done = batch["next_obs"], batch["done"]
+    k_next, k_actor, k_bc = jax.random.split(key, 3)
+
+    # ---- critic update ------------------------------------------------
+    a_next, _, _, _ = AG.actor_sample(ts.actor, acfg, ecfg, sched, nobs, k_next)
+    q1t = AG.critic_apply(ts.target1, nobs, a_next)
+    q2t = AG.critic_apply(ts.target2, nobs, a_next)
+    y = rew + scfg.gamma * (1.0 - done) * jnp.minimum(q1t, q2t)     # Eq. 20
+    y = jax.lax.stop_gradient(y)
+
+    def critic_loss(cp):
+        q = AG.critic_apply(cp, obs, act)
+        return jnp.mean(jnp.square(y - q)), q
+
+    (l1, q1), g1 = jax.value_and_grad(critic_loss, has_aux=True)(ts.critic1)
+    (l2, _), g2 = jax.value_and_grad(critic_loss, has_aux=True)(ts.critic2)
+    u1, oc1 = adam_update(g1, ts.opt_critic1, ts.critic1, scfg.critic_lr,
+                          weight_decay=scfg.weight_decay)
+    u2, oc2 = adam_update(g2, ts.opt_critic2, ts.critic2, scfg.critic_lr,
+                          weight_decay=scfg.weight_decay)
+    c1 = apply_updates(ts.critic1, u1)
+    c2 = apply_updates(ts.critic2, u2)
+
+    # ---- actor update (Eq. 15/16) -------------------------------------
+    def actor_loss(ap):
+        a, mean, log_sigma, ent = AG.actor_sample(ap, acfg, ecfg, sched, obs, k_actor)
+        q = jnp.minimum(AG.critic_apply(c1, obs, a), AG.critic_apply(c2, obs, a))
+        loss = -jnp.mean(q + acfg.entropy_alpha * ent)
+        if scfg.bc_coef > 0.0 and acfg.policy == "diffusion":
+            from repro.core.agent import _encode
+            f_s = _encode(ap, acfg, ecfg, obs)
+            loss = loss + scfg.bc_coef * DF.bc_loss(ap["denoiser"], sched, f_s,
+                                                    act, k_bc)
+        return loss, (jnp.mean(q), jnp.mean(ent))
+
+    (la, (qm, entm)), ga = jax.value_and_grad(actor_loss, has_aux=True)(ts.actor)
+    ua, oa = adam_update(ga, ts.opt_actor, ts.actor, scfg.actor_lr,
+                         weight_decay=scfg.weight_decay)
+    actor = apply_updates(ts.actor, ua)
+
+    ts = TrainState(actor=actor, critic1=c1, critic2=c2,
+                    target1=_soft_update(ts.target1, c1, scfg.tau),
+                    target2=_soft_update(ts.target2, c2, scfg.tau),
+                    opt_actor=oa, opt_critic1=oc1, opt_critic2=oc2,
+                    step=ts.step + 1)
+    metrics = {"critic_loss": 0.5 * (l1 + l2), "actor_loss": la,
+               "q_mean": qm, "entropy": entm, "q_batch": jnp.mean(q1)}
+    return ts, metrics
+
+
+# ----------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("ecfg", "acfg", "deterministic"))
+def policy_act(actor_params, obs, key, *, ecfg: EV.EnvConfig,
+               acfg: AG.AgentConfig, deterministic: bool = False):
+    sched = DF.vp_schedule(acfg.T)
+    a, _, _, _ = AG.actor_sample(actor_params, acfg, ecfg, sched, obs, key,
+                                 deterministic=deterministic)
+    return a
+
+
+def run_episode(ecfg: EV.EnvConfig, trace, actor_params, acfg: AG.AgentConfig,
+                key, buffer: ReplayBuffer = None, deterministic: bool = False,
+                step_fn=None):
+    """Host-driven episode; returns (metrics, transitions, total_reward)."""
+    if step_fn is None:
+        step_fn = jax.jit(lambda s, a: EV.step(ecfg, trace, s, a),
+                          static_argnums=())
+    state = EV.reset(ecfg)
+    obs = EV.observe(ecfg, trace, state)
+    total_r, steps = 0.0, 0
+    done = False
+    while not done:
+        key, ka = jax.random.split(key)
+        a = policy_act(actor_params, obs, ka, ecfg=ecfg, acfg=acfg,
+                       deterministic=deterministic)
+        env_a = AG.to_env_action(a)
+        state, next_obs, r, done_arr, info = step_fn(state, env_a)
+        done = bool(done_arr)
+        if buffer is not None:
+            buffer.add(np.asarray(obs), np.asarray(a), float(r),
+                       np.asarray(next_obs), done)
+        total_r += float(r)
+        obs = next_obs
+        steps += 1
+    metrics = {k: float(v) for k, v in
+               EV.episode_metrics(ecfg, trace, state).items()}
+    metrics["episode_return"] = total_r
+    metrics["episode_len"] = steps
+    return metrics
+
+
+def seed_with_demonstrations(buffer: ReplayBuffer, ecfg: EV.EnvConfig,
+                             trace_fn, key, episodes: int = 8):
+    """Beyond-paper: fill the replay buffer with Greedy-oracle episodes so
+    the off-policy critics see high-reward (reuse-aware) transitions before
+    the diffusion actor has learned to produce them. The actor itself is
+    never behavior-cloned — this is pure off-policy demonstration seeding."""
+    from repro.core import baselines as BL
+    n = 0
+    for _ in range(episodes):
+        key, kt = jax.random.split(key)
+        trace = trace_fn(kt)
+        step_fn = jax.jit(lambda s, a: EV.step(ecfg, trace, s, a))
+        state = EV.reset(ecfg)
+        obs = EV.observe(ecfg, trace, state)
+        done = False
+        while not done:
+            a_env = BL.greedy_act(ecfg, trace, state)
+            state, next_obs, r, d, _ = step_fn(state, a_env)
+            done = bool(d)
+            # store in the agent's native [-1, 1] range
+            buffer.add(np.asarray(obs), np.asarray(a_env) * 2.0 - 1.0,
+                       float(r), np.asarray(next_obs), done)
+            obs = next_obs
+            n += 1
+    return n
+
+
+def train(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, scfg: SACConfig,
+          trace_fn, num_episodes: int, seed: int = 0, log_every: int = 10,
+          callback=None, demo_episodes: int = 0):
+    """Full training loop (Algorithm 2). trace_fn(key) -> trace dict.
+    demo_episodes > 0 seeds the buffer with Greedy demonstrations."""
+    key = jax.random.PRNGKey(seed)
+    rng = np.random.default_rng(seed)
+    key, k0 = jax.random.split(key)
+    ts = init_train_state(k0, ecfg, acfg)
+    buffer = ReplayBuffer(scfg.buffer_capacity, ecfg.obs_shape, ecfg.action_dim)
+    if demo_episodes:
+        key, kd = jax.random.split(key)
+        n = seed_with_demonstrations(buffer, ecfg, trace_fn, kd, demo_episodes)
+        if log_every:
+            print(f"[demo] seeded buffer with {n} greedy transitions")
+    history = []
+    step_cache = {}
+
+    for ep in range(num_episodes):
+        key, kt, ke = jax.random.split(key, 3)
+        trace = trace_fn(kt)
+        step_fn_t = step_cache.setdefault(
+            "step", jax.jit(lambda s, a, tr: EV.step(ecfg, tr, s, a)))
+        step_fn = lambda s, a: step_fn_t(s, a, trace)  # noqa: E731
+        # -- rollout
+        state = EV.reset(ecfg)
+        obs = EV.observe(ecfg, trace, state)
+        total_r, nsteps, done = 0.0, 0, False
+        while not done:
+            ke, ka = jax.random.split(ke)
+            if buffer.size < scfg.warmup_steps:
+                a = np.asarray(jax.random.uniform(ka, (ecfg.action_dim,),
+                                                  minval=-1.0, maxval=1.0))
+            else:
+                a = policy_act(ts.actor, obs, ka, ecfg=ecfg, acfg=acfg)
+            state, next_obs, r, done_arr, _ = step_fn(state, AG.to_env_action(
+                jnp.asarray(a)))
+            done = bool(done_arr)
+            buffer.add(np.asarray(obs), np.asarray(a), float(r),
+                       np.asarray(next_obs), done)
+            total_r += float(r)
+            obs = next_obs
+            nsteps += 1
+            # -- updates
+            if buffer.size >= scfg.warmup_steps \
+                    and nsteps % scfg.update_every == 0:
+                for _ in range(scfg.updates_per_step):
+                    key, ku = jax.random.split(key)
+                    batch = {k: jnp.asarray(v) for k, v in
+                             buffer.sample(rng, scfg.batch_size).items()}
+                    ts, m = update_step(ts, batch, ku, ecfg=ecfg, acfg=acfg,
+                                        scfg=scfg)
+        em = {k: float(v) for k, v in EV.episode_metrics(ecfg, trace, state).items()}
+        em.update(episode=ep, episode_return=total_r, episode_len=nsteps)
+        history.append(em)
+        if callback:
+            callback(ep, em, ts)
+        if log_every and ep % log_every == 0:
+            print(f"[ep {ep:4d}] R={total_r:8.2f} len={nsteps:4d} "
+                  f"resp={em['avg_response']:7.2f} q={em['avg_quality']:.3f} "
+                  f"reload={em['reload_rate']:.2f}")
+    return ts, history

@@ -1,0 +1,45 @@
+"""Latency model calibrated to the paper's Table VI measurements.
+
+| patches | init time (s) | time per inference step (s) |
+|   1     |     33.5      |            0.53             |
+|   2     |     31.9      |            0.29             |
+|   4     |     35.0      |            0.20             |
+
+Init time is ~constant in the patch count; execution time is linear in the
+number of inference steps with a per-step cost that shrinks sub-linearly with
+parallelism (Table I acceleration: x1.8 @2, x3.1 @4, x4.9 @8). The 8-patch
+per-step time is extrapolated from Table I's x4.9 speedup (0.53/4.9≈0.108)
+blended with the trend of Table VI -> 0.135 s.
+
+For multi-architecture mode each service scales these by its per-step FLOP
+ratio relative to Stable Diffusion v1.4 (see serving/latency_table.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# indexed by log2(patches): 1, 2, 4, 8
+INIT_TIME = jnp.asarray([33.5, 31.9, 35.0, 36.0], jnp.float32)
+STEP_TIME = jnp.asarray([0.53, 0.29, 0.20, 0.135], jnp.float32)
+
+
+def _log2i(c):
+    # c in {1,2,4,8} -> {0,1,2,3}
+    return jnp.asarray(jnp.round(jnp.log2(jnp.maximum(c, 1))), jnp.int32)
+
+
+def init_time(c, model_scale=1.0):
+    """Model (re)initialisation latency for a c-patch gang."""
+    return INIT_TIME[_log2i(c)] * model_scale
+
+
+def exec_time(c, steps, model_scale=1.0):
+    """Inference latency for `steps` diffusion steps on a c-patch gang."""
+    return STEP_TIME[_log2i(c)] * steps.astype(jnp.float32) * model_scale
+
+
+def predict_remaining(c, steps, reuse, model_scale=1.0):
+    """The scheduler's remaining-time predictor t^r_e (paper §V.A.3):
+    linear-in-steps execution + init when the model must be (re)loaded."""
+    t = exec_time(c, steps, model_scale)
+    return t + jnp.where(reuse, 0.0, init_time(c, model_scale))

@@ -1,0 +1,27 @@
+"""Public wrapper: adapts the diffusion-policy params dict to the fused kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.diffusion import timestep_embedding
+from repro.kernels.denoiser.kernel import denoiser_step
+
+
+def denoise_eps_fused(denoiser_params, x, i, f_s, t_dim: int = 16,
+                      interpret: bool = True):
+    """Drop-in for repro.core.diffusion.denoise_eps (batched inputs)."""
+    layers = denoiser_params["layers"]
+    temb = timestep_embedding(i, t_dim)
+    inp = jnp.concatenate([x, temb, f_s], axis=-1)
+    squeeze = inp.ndim == 1
+    if squeeze:
+        inp = inp[None]
+    out = denoiser_step(inp,
+                        layers[0]["w"], layers[0]["b"],
+                        layers[1]["w"], layers[1]["b"],
+                        layers[2]["w"], layers[2]["b"],
+                        interpret=interpret)
+    return out[0] if squeeze else out

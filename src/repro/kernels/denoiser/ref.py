@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: matches repro.core.diffusion.denoise_eps given the same
+flattened weights."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import mish
+
+
+def denoiser_ref(inp, w1, b1, w2, b2, w3, b3):
+    h = mish(inp @ w1 + b1)
+    h = mish(h @ w2 + b2)
+    return jnp.tanh(h @ w3 + b3)

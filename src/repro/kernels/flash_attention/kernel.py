@@ -1,0 +1,120 @@
+"""Pallas TPU flash attention (causal / full / sliding-window, GQA).
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) with the KV axis
+innermost — TPU grid iteration is sequential over the trailing axis, so the
+online-softmax running statistics (m, l, acc) live in VMEM scratch and carry
+across KV steps. BlockSpecs tile Q/K/V into (block_q, head_dim) /
+(block_k, head_dim) VMEM blocks; head_dim is expected to be a multiple of
+128 on real TPUs (the MXU lane width) — the ops.py wrapper pads if needed.
+
+Causality is handled two ways: fully-masked KV blocks are skipped with
+``pl.when`` (no FLOPs issued), and the diagonal block applies an elementwise
+mask built from ``broadcasted_iota``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 causal: bool, window: int, block_q: int, block_k: int,
+                 num_kv_blocks: int, sm_scale: float, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # block-level skip: block fully above the diagonal (causal) or fully
+    # outside the sliding window
+    run = k_start < kv_len
+    if causal:
+        run = run & (k_start <= q_start + block_q - 1)
+    if window:
+        run = run & (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret",
+                     "kv_len"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True, kv_len: int = 0):
+    """q: (B, H, S, hd); k/v: (B, KV, T, hd); returns (B, H, S, hd).
+
+    H % KV == 0 (GQA). S and T must be multiples of block_q/block_k (the
+    ops.py wrapper pads). ``interpret=True`` executes on CPU for validation;
+    on a real TPU pass interpret=False.
+    """
+    b, h, s, hd = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    g = h // kvh
+    nq = s // block_q
+    nk = t // block_k
+    sm_scale = float(hd) ** -0.5
+
+    kernel = functools.partial(
+        _attn_kernel, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, num_kv_blocks=nk, sm_scale=sm_scale,
+        kv_len=kv_len or t)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, h_, q_, k_, g=g: (b_, h_ // g, k_, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, h_, q_, k_, g=g: (b_, h_ // g, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,36 @@
+"""Jitted public wrapper: pads to block multiples, handles layout.
+
+Public contract matches ``repro.models.attention.flash_attention_jnp``:
+q: (B, S, H, hd); k/v: (B, T, KV, hd) -> (B, S, H, hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              block_q: int = 128, block_k: int = 128, interpret: bool = True):
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    block_q = min(block_q, max(8, s))
+    block_k = min(block_k, max(8, t))
+    sp = (-s) % block_q
+    tp = (-t) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, sp), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, tp), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, tp), (0, 0), (0, 0)))
+    # head-major layout for the kernel
+    qm = qp.transpose(0, 2, 1, 3)
+    km = kp.transpose(0, 2, 1, 3)
+    vm = vp.transpose(0, 2, 1, 3)
+    o = flash_attention(qm, km, vm, causal=causal, window=window,
+                        block_q=block_q, block_k=block_k, interpret=interpret,
+                        kv_len=t)
+    return o.transpose(0, 2, 1, 3)[:, :s]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import simple_attention
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, H, S, hd); k/v: (B, KV, T, hd) — kernel layout (head-major)."""
+    # simple_attention expects (B, S, H, hd)
+    o = simple_attention(q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+                         causal=causal, window=window)
+    return o.swapaxes(1, 2)

@@ -1,0 +1,96 @@
+"""Pallas TPU selective-scan (Mamba) kernel.
+
+TPU adaptation of the CUDA selective-scan: instead of one thread block per
+(batch, channel-chunk) with warp-level scans, we tile the *channel* (inner)
+dimension across the parallel grid axes and keep the *sequence* axis as the
+trailing (sequential) grid dimension; the recurrent state (block_i, N) lives
+in VMEM scratch and carries across sequence blocks. Within a sequence block
+the recurrence runs as an unrolled fori_loop over timesteps — each step is a
+(block_i, N) elementwise FMA, which maps onto the VPU; the state never
+round-trips to HBM.
+
+Contract (matches ref.py):
+    dt:   (B, S, I)   softplus-discretised timestep
+    A:    (I, N)      negative-real state matrix
+    Bm:   (B, S, N)   input projection
+    Cm:   (B, S, N)   output projection
+    x:    (B, S, I)   post-conv activations
+    h0:   (B, I, N)   initial state
+ -> y:    (B, S, I)   with  h_t = exp(dt A) h_{t-1} + dt B x ;  y_t = C.h_t
+    hT:   (B, I, N)   final state
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(dt_ref, a_ref, b_ref, c_ref, x_ref, h0_ref, y_ref, hT_ref,
+                h_scr, *, block_s: int, block_i: int, num_s_blocks: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)           # (bi, N)
+
+    a = a_ref[...].astype(jnp.float32)                       # (bi, N)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t].astype(jnp.float32)              # (bi,)
+        x_t = x_ref[0, t].astype(jnp.float32)                # (bi,)
+        b_t = b_ref[0, t].astype(jnp.float32)                # (N,)
+        c_t = c_ref[0, t].astype(jnp.float32)                # (N,)
+        da = jnp.exp(dt_t[:, None] * a)                      # (bi, N)
+        h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_ref[0, t] = (h @ c_t).astype(y_ref.dtype)          # (bi,)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(si == num_s_blocks - 1)
+    def _final():
+        hT_ref[0] = h.astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_i", "interpret"))
+def ssm_scan(dt, a, bm, cm, x, h0, *, block_s: int = 64, block_i: int = 256,
+             interpret: bool = True):
+    B, S, I = dt.shape
+    N = a.shape[1]
+    block_s = min(block_s, S)
+    block_i = min(block_i, I)
+    assert S % block_s == 0 and I % block_i == 0, (S, I, block_s, block_i)
+    ns = S // block_s
+    ni = I // block_i
+
+    kernel = functools.partial(_ssm_kernel, block_s=block_s, block_i=block_i,
+                               num_s_blocks=ns)
+    # layout: channel-blocked inputs (B, S, I) -> blocks (1, bs, bi)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(B, ni, ns),
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_i), lambda b, i, s: (b, s, i)),  # dt
+            pl.BlockSpec((block_i, N), lambda b, i, s: (i, 0)),             # A
+            pl.BlockSpec((1, block_s, N), lambda b, i, s: (b, s, 0)),       # B
+            pl.BlockSpec((1, block_s, N), lambda b, i, s: (b, s, 0)),       # C
+            pl.BlockSpec((1, block_s, block_i), lambda b, i, s: (b, s, i)),  # x
+            pl.BlockSpec((1, block_i, N), lambda b, i, s: (b, i, 0)),       # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, block_i), lambda b, i, s: (b, s, i)),
+            pl.BlockSpec((1, block_i, N), lambda b, i, s: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, I), dt.dtype),
+            jax.ShapeDtypeStruct((B, I, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_i, N), jnp.float32)],
+        interpret=interpret,
+    )(dt, a, bm, cm, x, h0)
+    return y, hT

@@ -1,0 +1,30 @@
+"""Public wrapper for the selective-scan kernel (pads seq/channels)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssm_scan
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_i", "interpret"))
+def selective_scan(dt, a, bm, cm, x, h0=None, *, block_s: int = 64,
+                   block_i: int = 256, interpret: bool = True):
+    B, S, I = dt.shape
+    N = a.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, I, N), jnp.float32)
+    block_s = min(block_s, S)
+    block_i = min(block_i, I)
+    sp = (-S) % block_s
+    ip = (-I) % block_i
+    pad3 = lambda z: jnp.pad(z, ((0, 0), (0, sp), (0, 0)))
+    dt_p = jnp.pad(dt, ((0, 0), (0, sp), (0, ip)))
+    x_p = jnp.pad(x, ((0, 0), (0, sp), (0, ip)))
+    a_p = jnp.pad(a, ((0, ip), (0, 0)))
+    h0_p = jnp.pad(h0, ((0, 0), (0, ip), (0, 0)))
+    y, hT = ssm_scan(dt_p, a_p, pad3(bm), pad3(cm), x_p, h0_p,
+                     block_s=block_s, block_i=block_i, interpret=interpret)
+    return y[:, :S, :I], hT[:, :I]

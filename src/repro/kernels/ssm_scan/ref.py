@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the selective-scan kernel (sequential recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(dt, a, bm, cm, x, h0):
+    """Same contract as kernel.ssm_scan. Straight lax.scan over time."""
+    def step(h, xs):
+        dt_t, b_t, c_t, x_t = xs                       # (B,I), (B,N), (B,N), (B,I)
+        da = jnp.exp(dt_t[..., None].astype(jnp.float32) * a.astype(jnp.float32))
+        h = da * h + (dt_t * x_t)[..., None].astype(jnp.float32) * b_t[:, None, :].astype(jnp.float32)
+        y = jnp.einsum("bin,bn->bi", h, c_t.astype(jnp.float32))
+        return h, y
+
+    xs = (dt.swapaxes(0, 1), bm.swapaxes(0, 1), cm.swapaxes(0, 1), x.swapaxes(0, 1))
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1).astype(dt.dtype), hT

@@ -1,0 +1,28 @@
+"""Production meshes. TARGET: TPU v5e pods — 256 chips (16x16) per pod,
+2 pods = 512 chips for the multi-pod dry-run.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+# TPU v5e hardware constants (per chip) for the roofline model
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (uses however many host devices exist)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

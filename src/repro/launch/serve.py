@@ -1,0 +1,25 @@
+"""CLI serving launcher — wraps the edge-serving engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --servers 4 \
+        --archs qwen2-1.5b,tinyllama-1.1b --tasks 12 --policy eat
+
+Equivalent to examples/serve_cluster.py (the annotated walk-through) but
+runnable as a module from anywhere in the repo.
+"""
+from __future__ import annotations
+
+import os
+import runpy
+import sys
+
+
+def main():
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    script = os.path.join(repo, "examples", "serve_cluster.py")
+    sys.argv[0] = script
+    runpy.run_path(script, run_name="__main__")
+
+
+if __name__ == "__main__":
+    main()

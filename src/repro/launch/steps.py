@@ -1,0 +1,235 @@
+"""Step builders + input_specs for the multi-pod dry-run.
+
+For every (architecture x input shape x mesh) this module produces:
+  * the step function (train_step / prefill_step / decode_step),
+  * ShapeDtypeStruct stand-ins for every input (no device allocation),
+  * in/out NamedShardings assembled from the partition rules.
+
+Sharding policy (baseline; §Perf iterates on this):
+  * batch over the data-parallel axes (pod, data) when divisible;
+  * weights FSDP: d_model over `data`, wide dim over `model`;
+  * decode KV caches: sequence dim over every mesh axis not used by the
+    batch (flash-decoding style sharded softmax) — this is the TPU mapping
+    of the paper's DistriFusion patch parallelism;
+  * train/prefill activations: batch-sharded, full sequence per device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import ArchConfig
+from repro.launch.shapes import ShapeSpec, adapt_config
+from repro.models.zoo import Model, build_model
+from repro.sharding.context import activation_sharding
+from repro.sharding.specs import batch_spec, cache_rules, tree_shardings
+from repro.training.optimizer import adam_init, adam_update, apply_updates
+
+
+class Case(NamedTuple):
+    fn: Any                     # the step callable
+    arg_structs: Tuple          # ShapeDtypeStructs to .lower(*args)
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    cfg: ArchConfig
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _tree_repl(tree, mesh):
+    return jax.tree_util.tree_map(lambda _: _repl(mesh), tree)
+
+
+def batch_structs(cfg: ArchConfig, batch: int, seq: int) -> Dict:
+    out = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.frontend == "vision":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+    return out
+
+
+def _batch_shardings(structs: Dict, mesh: Mesh, dp) -> Dict:
+    out = {}
+    for k, v in structs.items():
+        spec = [dp] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape
+    (the public entry the assignment asks for)."""
+    if shape.kind == "train":
+        b = batch_structs(cfg, shape.global_batch, shape.seq_len)
+        b["labels"] = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                           jnp.int32)
+        return b
+    if shape.kind == "prefill":
+        return batch_structs(cfg, shape.global_batch, shape.seq_len)
+    return {"token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)}
+
+
+# ----------------------------------------------------------------------
+def build_case(arch_cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh, *,
+               lr: float = 1e-4, compute_dtype=jnp.bfloat16,
+               remat: bool = True, seq_shard_activations: bool = False,
+               microbatches: int = 1, tp_inference: bool = False,
+               param_dtype=jnp.float32) -> Optional[Case]:
+    cfg = adapt_config(arch_cfg, shape)
+    if cfg is None:
+        return None
+    model = build_model(cfg)
+    dp = batch_spec(mesh, shape.global_batch)
+    seq_ax = "model" if seq_shard_activations and shape.seq_len % mesh.shape["model"] == 0 else None
+    act_sh = NamedSharding(mesh, P(dp if dp else None, seq_ax, None))
+    moe_sh = None
+    if cfg.moe is not None and cfg.moe.num_experts % mesh.shape["model"] == 0:
+        moe_sh = NamedSharding(mesh, P(dp if dp else None, "model", None, None))
+
+    def pin_activations(fn):
+        """Arm the activation-sharding constraints while tracing the step."""
+        def wrapped(*args):
+            with activation_sharding(act_sh, moe_sh):
+                return fn(*args)
+        return wrapped
+
+    params_struct = jax.eval_shape(
+        functools.partial(model.init, dtype=param_dtype), jax.random.PRNGKey(0))
+    prules = None
+    if tp_inference and shape.kind != "train":
+        # §Perf iteration (decode): tensor-parallel-only weights — replicate
+        # over the `data`/`pod` axes so serving steps never pay per-step
+        # FSDP all-gathers. Weight residency grows n_data-fold but stays
+        # far under HBM for every assigned arch (<= 6.5 GB for jamba-52b).
+        from repro.sharding.specs import PARAM_RULES
+        prules = [(pat, tuple(None if e in ("data", "pod") else e
+                              for e in entries))
+                  for pat, entries in PARAM_RULES]
+    param_sh = (tree_shardings(params_struct, mesh, rules=prules)
+                if prules else tree_shardings(params_struct, mesh))
+
+    if shape.kind == "train":
+        bstructs = input_specs(cfg, shape)
+        b_sh = _batch_shardings(bstructs, mesh, dp)
+        opt_struct = jax.eval_shape(adam_init, params_struct)
+        opt_sh = tree_shardings(opt_struct, mesh)
+
+        def grad_of(params, mb):
+            def loss_fn(p):
+                loss, metrics = model.loss(p, mb, compute_dtype=compute_dtype,
+                                           remat=remat)
+                return loss, metrics
+            return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+        def train_step(params, opt_state, batch):
+            if microbatches <= 1:
+                (loss, metrics), grads = grad_of(params, batch)
+            else:
+                # gradient accumulation (§Perf iteration 4): scan over
+                # microbatches so activation working sets scale with
+                # B/microbatches; grads accumulate in f32 at param sharding.
+                def split(v):
+                    b = v.shape[0]
+                    return v.reshape(microbatches, b // microbatches,
+                                     *v.shape[1:])
+                mbs = {k: split(v) for k, v in batch.items()}
+
+                def acc_fn(carry, mb):
+                    g_acc, l_acc = carry
+                    (loss, metrics), g = grad_of(params, mb)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, b_: a + b_.astype(a.dtype), g_acc, g)
+                    return (g_acc, l_acc + loss), metrics
+
+                g0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), mstack = jax.lax.scan(
+                    acc_fn, (g0, jnp.zeros((), jnp.float32)), mbs)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g / microbatches, grads)
+                loss = loss / microbatches
+                metrics = jax.tree_util.tree_map(lambda m: m[-1], mstack)
+            updates, opt_state = adam_update(grads, opt_state, params, lr)
+            params = apply_updates(params, updates)
+            return params, opt_state, loss, metrics
+
+        loss_struct, metrics_struct = jax.eval_shape(
+            lambda p, b: model.loss(p, b, compute_dtype=compute_dtype,
+                                    remat=remat),
+            params_struct, bstructs)
+        return Case(
+            fn=pin_activations(train_step),
+            arg_structs=(params_struct, opt_struct, bstructs),
+            in_shardings=(param_sh, opt_sh, b_sh),
+            out_shardings=(param_sh, opt_sh, _repl(mesh),
+                           _tree_repl(metrics_struct, mesh)),
+            donate_argnums=(0, 1),
+            cfg=cfg,
+        )
+
+    # inference cases ---------------------------------------------------
+    seq_axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.shape and a not in (dp if isinstance(dp, tuple) else (dp,)))
+    crules = cache_rules(dp if dp else None, seq_axes if seq_axes else None)
+    cache_struct = jax.eval_shape(
+        functools.partial(model.make_cache, shape.global_batch, shape.seq_len,
+                          jnp.bfloat16))
+    cache_sh = tree_shardings(cache_struct, mesh, rules=crules)
+
+    if shape.kind == "prefill":
+        bstructs = input_specs(cfg, shape)
+        b_sh = _batch_shardings(bstructs, mesh, dp)
+
+        def prefill_step(params, batch, cache):
+            # capacity-bounded MoE dispatch at scale (dropless would cost
+            # e/k-times the expert FLOPs on a 32k prompt)
+            return model.prefill(params, batch, cache,
+                                 compute_dtype=compute_dtype,
+                                 moe_dropless=False)
+
+        logits_struct, _ = jax.eval_shape(prefill_step, params_struct,
+                                          bstructs, cache_struct)
+        return Case(
+            fn=pin_activations(prefill_step),
+            arg_structs=(params_struct, bstructs, cache_struct),
+            in_shardings=(param_sh, b_sh, cache_sh),
+            out_shardings=(NamedSharding(mesh, P(dp if dp else None)), cache_sh),
+            donate_argnums=(2,),
+            cfg=cfg,
+        )
+
+    # decode
+    tok_struct = input_specs(cfg, shape)["token"]
+    tok_sh = NamedSharding(mesh, P(dp if dp else None, None))
+
+    def decode_step(params, cache, token):
+        # s=1: capacity == dropless (each token hits k distinct experts)
+        return model.decode(params, cache, token, compute_dtype=compute_dtype,
+                            moe_dropless=False)
+
+    return Case(
+        fn=pin_activations(decode_step),
+        arg_structs=(params_struct, cache_struct, tok_struct),
+        in_shardings=(param_sh, cache_sh, tok_sh),
+        out_shardings=(NamedSharding(mesh, P(dp if dp else None)), cache_sh),
+        donate_argnums=(1,),
+        cfg=cfg,
+    )
+
+
+def lower_case(case: Case):
+    jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
+                     out_shardings=case.out_shardings,
+                     donate_argnums=case.donate_argnums)
+    return jitted.lower(*case.arg_structs)

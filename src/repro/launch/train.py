@@ -1,0 +1,50 @@
+"""CLI training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        [--reduced] [--steps 100] [--batch 8] [--seq 256] [--ckpt-dir DIR]
+
+Runs the pretraining substrate (Adam + cosine + grad-clip + checkpointing)
+on the selected architecture. On this CPU container use ``--reduced`` (the
+smoke-scale variant); on a real TPU mesh the same step functions lower via
+``repro.launch.steps`` (see dryrun.py for the production-mesh path).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.common.config import ASSIGNED_ARCHS, get_config
+from repro.training.data import DataConfig
+from repro.training.train_loop import TrainConfig, train_lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    choices=list(ASSIGNED_ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"training {cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+    tcfg = TrainConfig(lr=args.lr, total_steps=args.steps,
+                       warmup=max(5, args.steps // 10),
+                       ckpt_dir=args.ckpt_dir)
+    dcfg = DataConfig(vocab_size=min(cfg.vocab_size, 2048),
+                      seq_len=args.seq, batch_size=args.batch,
+                      seed=args.seed)
+    _params, history = train_lm(cfg, tcfg, dcfg, seed=args.seed)
+    print(f"final loss {history[-1]['loss']:.4f} "
+          f"({history[0]['loss']:.4f} at step 0)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,246 @@
+"""Memory-efficient attention in pure JAX (the XLA path used by the dry-run).
+
+Three entry points:
+
+* :func:`flash_attention_jnp` — blocked online-softmax attention (training /
+  prefill). Doubly chunked (query blocks outer ``lax.scan``, KV blocks inner)
+  so peak memory is O(Bq*Bk) per head regardless of sequence length. Supports
+  full, causal, and causal-sliding-window masking, and GQA without
+  materialising repeated KV heads. This is also the oracle contract for the
+  Pallas ``kernels/flash_attention``.
+* :func:`decode_attention` — one-query-token attention against a (possibly
+  rolling) KV cache; linear in cache length, GSPMD-friendly when the cache's
+  sequence dim is sharded (partial max/sum lower to all-reduces).
+* :func:`simple_attention` — naive O(S^2) reference used only in tests.
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache, partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_split(q, num_kv: int):
+    """(B, S, H, hd) -> (B, S, KV, G, hd)."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, hd)
+
+
+def simple_attention(q, k, v, *, causal: bool, window: int = 0,
+                     q_offset: int = 0):
+    """Naive attention oracle. q: (B,S,H,hd) k/v: (B,T,KV,hd)."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    qg = _gqa_split(q, kv)                                    # (B,S,KV,G,hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    qpos = jnp.arange(s) + q_offset
+    kpos = jnp.arange(t)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
+    return out.reshape(b, s, h, hd)
+
+
+def _mask_block(qpos, kposb, kvalid_b, causal: bool, window: int):
+    msk = kvalid_b[None, :]
+    if causal:
+        msk = msk & (kposb[None, :] <= qpos[:, None])
+    if window:
+        msk = msk & (kposb[None, :] > (qpos[:, None] - window))
+    return msk
+
+
+def _flash_fwd_scan(qg, kb, vb, kpos, kvalid, *, causal, window, q_block,
+                    q_offset, scale):
+    """qg: (B, nq, qb, KV, G, hd); kb/vb: (B, nk, kb, KV, hd).
+    Returns out (B,KV,G,nq,qb,hd) f32 and lse (B,KV,G,nq,qb)."""
+    b, nq, qb, kv, g, hd = qg.shape
+
+    def q_step(_, qi):
+        qblk, qidx = qi
+        qpos = qidx * q_block + jnp.arange(q_block) + q_offset
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kposb, kvalb = ki
+            sc = jnp.einsum("bqkgh,bckh->bkgqc", qblk, kblk).astype(jnp.float32) * scale
+            msk = _mask_block(qpos, kposb, kvalb, causal, window)
+            sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckh->bkgqh", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), kpos, kvalid))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KV,G,qb,hd)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))              # (B,KV,G,qb)
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(
+        q_step, None, (qg.swapaxes(0, 1), jnp.arange(nq)))
+    # outs: (nq,B,KV,G,qb,hd) -> (B,KV,G,nq,qb,hd); lses -> (B,KV,G,nq,qb)
+    return outs.transpose(1, 2, 3, 0, 4, 5), lses.transpose(1, 2, 3, 0, 4)
+
+
+@lru_cache(maxsize=None)
+def _make_flash(causal: bool, window: int, q_block: int, k_block: int,
+                q_offset: int):
+    """Flash attention with a flash *backward* (custom VJP): only
+    (q, k, v, out, lse) are saved — O(S) memory — and dq/dk/dv are
+    recomputed blockwise, exactly like the FlashAttention-2 backward."""
+
+    def fwd_impl(qg, kb, vb, kpos, kvalid):
+        scale = 1.0 / math.sqrt(qg.shape[-1])
+        return _flash_fwd_scan(qg, kb, vb, kpos, kvalid, causal=causal,
+                               window=window, q_block=q_block,
+                               q_offset=q_offset, scale=scale)
+
+    @jax.custom_vjp
+    def flash(qg, kb, vb, kpos, kvalid):
+        return fwd_impl(qg, kb, vb, kpos, kvalid)[0]
+
+    def flash_fwd(qg, kb, vb, kpos, kvalid):
+        out, lse = fwd_impl(qg, kb, vb, kpos, kvalid)
+        return out, (qg, kb, vb, kpos, kvalid, out, lse)
+
+    def flash_bwd(res, dout):
+        qg, kb, vb, kpos, kvalid, out, lse = res
+        b, nq, qb, kv, g, hd = qg.shape
+        nk, kblk_sz = kb.shape[1], kb.shape[2]
+        scale = 1.0 / math.sqrt(hd)
+        # D_i = rowsum(dO * O): (B,KV,G,nq,qb)
+        dmat = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+        qg32 = qg.astype(jnp.float32)
+
+        def kv_step(dq_acc, ki):
+            kblk, vblk, kposb, kvalb, j = ki                   # (B,kb,KV,hd)...
+            kblk32 = kblk.astype(jnp.float32)
+            vblk32 = vblk.astype(jnp.float32)
+
+            def q_step(carry, qi):
+                dk_j, dv_j = carry
+                qblk, do_b, lse_b, d_b, qidx = qi
+                # qblk: (B,qb,KV,G,hd); do_b/(B,KV,G,qb,hd); lse_b,(B,KV,G,qb)
+                qpos = qidx * q_block + jnp.arange(q_block) + q_offset
+                sc = jnp.einsum("bqkgh,bckh->bkgqc", qblk.astype(jnp.float32),
+                                kblk32) * scale
+                msk = _mask_block(qpos, kposb, kvalb, causal, window)
+                sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+                p = jnp.exp(sc - lse_b[..., None])             # (B,KV,G,qb,kb)
+                dv_j = dv_j + jnp.einsum("bkgqc,bkgqh->bckh", p,
+                                         do_b.astype(jnp.float32))
+                dp = jnp.einsum("bkgqh,bckh->bkgqc",
+                                do_b.astype(jnp.float32), vblk32)
+                ds = p * (dp - d_b[..., None]) * scale
+                dq_b = jnp.einsum("bkgqc,bckh->bqkgh", ds, kblk32)
+                dk_j = dk_j + jnp.einsum("bkgqc,bqkgh->bckh", ds,
+                                         qblk.astype(jnp.float32))
+                return (dk_j, dv_j), dq_b
+
+            z = jnp.zeros((b, kblk_sz, kv, hd), jnp.float32)
+            (dk_j, dv_j), dq_blocks = jax.lax.scan(
+                q_step, (z, z),
+                (qg.swapaxes(0, 1), dout.transpose(3, 0, 1, 2, 4, 5),
+                 lse.transpose(3, 0, 1, 2, 4), dmat.transpose(3, 0, 1, 2, 4),
+                 jnp.arange(nq)))
+            # dq_blocks: (nq, B, qb, KV, G, hd) -> accumulate
+            dq_acc = dq_acc + dq_blocks.swapaxes(0, 1)
+            return dq_acc, (dk_j, dv_j)
+
+        dq0 = jnp.zeros_like(qg, dtype=jnp.float32)
+        dq, (dk_blocks, dv_blocks) = jax.lax.scan(
+            kv_step, dq0,
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), kpos, kvalid,
+             jnp.arange(nk)))
+        dk = dk_blocks.swapaxes(0, 1)                          # (B,nk,kb,KV,hd)
+        dv = dv_blocks.swapaxes(0, 1)
+        return (dq.astype(qg.dtype), dk.astype(kb.dtype), dv.astype(vb.dtype),
+                None, None)
+
+    flash.defvjp(flash_fwd, flash_bwd)
+    return flash
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_block", "k_block", "q_offset"))
+def flash_attention_jnp(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_block: int = 512, k_block: int = 1024, q_offset: int = 0):
+    """Blocked online-softmax attention with flash backward.
+
+    q: (B, S, H, hd); k, v: (B, T, KV, hd); H % KV == 0.
+    Returns (B, S, H, hd). Padding to block multiples is handled internally.
+    """
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    q_block = min(q_block, s)
+    k_block = min(k_block, t)
+    s_pad = (-s) % q_block
+    t_pad = (-t) % k_block
+    qp = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad), (0, 0), (0, 0)))
+    nq, nk = (s + s_pad) // q_block, (t + t_pad) // k_block
+
+    qg = _gqa_split(qp, kv).reshape(b, nq, q_block, kv, g, hd)
+    kb = kp.reshape(b, nk, k_block, kv, hd)
+    vb = vp.reshape(b, nk, k_block, kv, hd)
+    kpos = (jnp.arange(nk * k_block)).reshape(nk, k_block)
+    kvalid = kpos < t
+
+    flash = _make_flash(causal, window, q_block, k_block, q_offset)
+    out = flash(qg, kb, vb, kpos, kvalid)                     # (B,KV,G,nq,qb,hd)
+    out = out.transpose(0, 3, 4, 1, 2, 5).reshape(b, nq * q_block, h, hd)
+    return out[:, :s].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     ring: bool = False):
+    """Single-step decode attention against a KV cache.
+
+    q: (B, 1, H, hd); k_cache/v_cache: (B, T, KV, hd); cache_len: () or (B,)
+    number of valid cache entries (includes the current token's KV, which the
+    caller has already written). If ``ring`` the cache is a rolling buffer of
+    size ``window`` (positions wrap); validity is then min(cache_len, window).
+    """
+    b, _, h, hd = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    qg = _gqa_split(q, kv)[:, 0]                              # (B, KV, G, hd)
+    qg = qg.swapaxes(1, 1)
+    sc = jnp.einsum("bkgh,btkh->bkgt", qg, k_cache).astype(jnp.float32)
+    sc = sc / jnp.sqrt(hd).astype(jnp.float32)
+    pos = jnp.arange(t)
+    clen = jnp.asarray(cache_len)
+    clen = clen.reshape(-1, *([1] * 1))                       # (B or 1, 1)
+    if ring:
+        valid = pos[None, :] < jnp.minimum(clen, t)
+    else:
+        valid = pos[None, :] < clen
+        if window:
+            valid = valid & (pos[None, :] >= clen - window)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    m = sc.max(axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgt,btkh->bkgh", (p / jnp.maximum(l, 1e-30)).astype(v_cache.dtype),
+                     v_cache)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

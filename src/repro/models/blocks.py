@@ -1,0 +1,551 @@
+"""Transformer / SSM / MoE building blocks with train, prefill and decode paths.
+
+Every block type exposes::
+
+    init_<blk>(key, cfg, ...)               -> params subtree
+    <blk>_train(p, cfg, x, ...)             -> y               (full sequence)
+    <blk>_prefill(p, cfg, x, cache, ...)    -> y, cache'       (build caches)
+    <blk>_decode(p, cfg, x, cache, pos)     -> y, cache'       (one token)
+
+``x`` is (B, S, d_model); blocks are residual-free (the LM adds residuals and
+norms). Caches are plain dicts of arrays so they stack along a leading period
+axis for ``lax.scan`` over layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ArchConfig, MoEConfig, SSMConfig
+from repro.common.pytree import KeyGen, normal_init
+from repro.models import attention as attn_lib
+from repro.models.layers import init_linear, linear, apply_rope
+from repro.sharding.context import constrain_moe
+
+
+# ======================================================================
+# attention block (GQA + RoPE, full / causal / sliding-window)
+def init_attn(key, cfg: ArchConfig):
+    kg = KeyGen(key)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "wq": init_linear(kg(), d, cfg.num_heads * hd, bias=cfg.qkv_bias),
+        "wk": init_linear(kg(), d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": init_linear(kg(), d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": init_linear(kg(), cfg.num_heads * hd, d,
+                          stddev=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _qkv(p, cfg: ArchConfig, x, positions, rope: bool = True):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(b, s, cfg.num_heads, hd)
+    k = linear(p["wk"], x).reshape(b, s, cfg.num_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(b, s, cfg.num_kv_heads, hd)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_train(p, cfg: ArchConfig, x, *, causal: bool = True, window: int = 0,
+               q_block: int = 512, k_block: int = 1024):
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(p, cfg, x, positions, rope=(cfg.layer_pattern != "encdec") or True)
+    o = attn_lib.flash_attention_jnp(q, k, v, causal=causal, window=window,
+                                     q_block=min(q_block, s), k_block=min(k_block, s))
+    return linear(p["wo"], o.reshape(b, s, -1))
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shp = (batch, cache_len, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def attn_prefill(p, cfg: ArchConfig, x, cache: Dict, *, window: int = 0):
+    """Run full-sequence attention and populate the KV cache.
+
+    The cache length may exceed S (room for decode); with a ring cache
+    (window > 0 and cache_len == window) the tail of the sequence is kept.
+    """
+    b, s, _ = x.shape
+    t = cache["k"].shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(p, cfg, x, positions)
+    o = attn_lib.flash_attention_jnp(q, k, v, causal=True, window=window,
+                                     q_block=min(512, s), k_block=min(1024, s))
+    if window and t == window and s > t:
+        k_keep, v_keep = k[:, -t:], v[:, -t:]
+        # ring layout: entry for absolute position p lives at p % window
+        idx = (jnp.arange(s - t, s)) % t
+        cache = {"k": cache["k"].at[:, idx].set(k_keep.astype(cache["k"].dtype)),
+                 "v": cache["v"].at[:, idx].set(v_keep.astype(cache["v"].dtype))}
+    else:
+        cache = {"k": jax.lax.dynamic_update_slice_in_dim(
+                     cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
+                 "v": jax.lax.dynamic_update_slice_in_dim(
+                     cache["v"], v.astype(cache["v"].dtype), 0, axis=1)}
+    return linear(p["wo"], o.reshape(b, s, -1)), cache
+
+
+def attn_decode(p, cfg: ArchConfig, x, cache: Dict, pos, *, window: int = 0):
+    """x: (B, 1, d); pos: scalar int32 absolute position of this token."""
+    b = x.shape[0]
+    t = cache["k"].shape[1]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    q, k, v = _qkv(p, cfg, x, positions)
+    ring = bool(window) and t == window
+    widx = (pos % t) if ring else pos
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), widx, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), widx, axis=1)
+    o = attn_lib.decode_attention(q, kc, vc, pos + 1, window=window, ring=ring)
+    return linear(p["wo"], o.reshape(b, 1, -1)), {"k": kc, "v": vc}
+
+
+# cross attention (whisper decoder): KV from encoder output, computed once.
+def init_cross_attn(key, cfg: ArchConfig):
+    return init_attn(key, cfg)
+
+
+def cross_attn_kv(p, cfg: ArchConfig, enc_out):
+    b, t, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = linear(p["wk"], enc_out).reshape(b, t, cfg.num_kv_heads, hd)
+    v = linear(p["wv"], enc_out).reshape(b, t, cfg.num_kv_heads, hd)
+    return {"k": k, "v": v}
+
+
+def cross_attn_apply(p, cfg: ArchConfig, x, kv: Dict):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(b, s, cfg.num_heads, hd)
+    o = attn_lib.flash_attention_jnp(q, kv["k"].astype(x.dtype), kv["v"].astype(x.dtype),
+                                     causal=False, q_block=min(512, s))
+    return linear(p["wo"], o.reshape(b, s, -1))
+
+
+# ======================================================================
+# mixture-of-experts FFN (top-k routing, index-based dispatch)
+def init_moe(key, cfg: ArchConfig, mcfg: MoEConfig):
+    kg = KeyGen(key)
+    d, e, f = cfg.d_model, mcfg.num_experts, mcfg.expert_d_ff
+    def ew(std):
+        return normal_init(kg(), (e, d, f), stddev=std)
+    return {
+        "router": init_linear(kg(), d, e, stddev=0.02),
+        "gate": normal_init(kg(), (e, d, f), stddev=1 / math.sqrt(d)),
+        "up": normal_init(kg(), (e, d, f), stddev=1 / math.sqrt(d)),
+        "down": normal_init(kg(), (e, f, d), stddev=1 / math.sqrt(f) / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def moe_apply(p, cfg: ArchConfig, mcfg: MoEConfig, x,
+              capacity_factor: float = 1.25,
+              dropless: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    Grouped capacity-dropped dispatch: each batch row is a routing group
+    (group-limited capacity), and all index computations (top-k, position-
+    within-expert cumsum, scatter/gather) are per-group and vmapped over the
+    batch dim — so under pjit with a batch-sharded input the dispatch shards
+    cleanly (GSPMD turns the expert einsums into all-to-alls when experts
+    are model-sharded) instead of replicating a global-token index
+    computation on every device.
+
+    ``dropless=True`` sets capacity to S (each token routes to a given
+    expert at most once, so S slots per expert can never overflow). This
+    makes the output *exactly* slicing-invariant — full forward == prefill
+    == token-by-token decode — at the cost of e/k-times the expert FLOPs,
+    so it is the default only on the small-scale inference paths; the
+    large-shape dry-run and the training loss keep capacity dispatch
+    (with its cap = ceil(S·k/e·cf) fixed shape).
+    """
+    b, s, d = x.shape
+    e, k = mcfg.num_experts, mcfg.experts_per_token
+    if dropless:
+        cap = s
+    else:
+        cap = max(1, min(s, int(math.ceil(s * k / e * capacity_factor))))
+
+    logits = linear(p["router"], x).astype(jnp.float32)           # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                          # (B, S, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style, over all tokens)
+    me = jnp.mean(probs, axis=(0, 1))                             # (E,)
+    ce = jnp.mean(jax.nn.one_hot(topi, e, dtype=jnp.float32),
+                  axis=(0, 1, 2))
+    aux = e * jnp.sum(me * ce) * mcfg.aux_loss_coef
+
+    def dispatch_group(xg, topi_g, topw_g):
+        """xg: (S, d); topi/topw: (S, k)."""
+        flat_e = topi_g.reshape(-1)                               # (S*k,)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # (S*k, E)
+        pos_all = jnp.cumsum(onehot, axis=0) - onehot
+        pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+        keep = pos < cap
+        pos_c = jnp.minimum(pos, cap - 1)
+        tok = jnp.repeat(jnp.arange(s), k)
+        # scatter-SET with OOB-drop for dropped tokens (§Perf: each (e, pos)
+        # slot receives at most one token, so no accumulation is needed —
+        # scatter-add gets f32-promoted by XLA and costs a (E,C,d) f32
+        # all-reduce; a set-scatter stays bf16).
+        pos_w = jnp.where(keep, pos, cap)            # cap = out of bounds
+        buf = jnp.zeros((e, cap, d), xg.dtype).at[flat_e, pos_w].set(
+            xg[tok], mode="drop")
+        return buf, (flat_e, pos_c, keep, tok, topw_g.reshape(-1))
+
+    buf, meta = jax.vmap(dispatch_group)(x, topi, topw)           # (B,E,C,d)
+    buf = constrain_moe(buf)      # (B, E, C, d): experts over `model`
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["gate"].astype(x.dtype))) * \
+        jnp.einsum("becd,edf->becf", buf, p["up"].astype(x.dtype))
+    out_e = jnp.einsum("becf,efd->becd", h, p["down"].astype(x.dtype))
+    out_e = constrain_moe(out_e)                                  # (B, E, C, d)
+
+    def combine_group(oe, m):
+        # gather + reshape-sum combine (§Perf: a scatter-add here gets
+        # f32-promoted by XLA and costs a full (B,S,d) f32 all-reduce per
+        # MoE layer; each token's k expert slots are consecutive in flat_e,
+        # so the combine is an exact reshape + weighted sum over k).
+        flat_e, pos_c, keep, tok, w_flat = m
+        del tok
+        gathered = oe[flat_e, pos_c]                              # (S*k, d)
+        w = (w_flat * keep).astype(oe.dtype)
+        return (gathered.reshape(s, k, d) * w.reshape(s, k, 1)).sum(axis=1)
+
+    y = jax.vmap(combine_group)(out_e, meta)
+    return y, aux
+
+
+# ======================================================================
+# Mamba selective-SSM block
+def init_mamba(key, cfg: ArchConfig, scfg: SSMConfig):
+    kg = KeyGen(key)
+    d = cfg.d_model
+    inner = scfg.expand * d
+    dt_rank = scfg.dt_rank or max(1, math.ceil(d / 16))
+    n = scfg.state_dim
+    # S4D-real initialisation for A
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (inner, 1))
+    return {
+        "in_proj": init_linear(kg(), d, 2 * inner),
+        "conv_w": normal_init(kg(), (scfg.conv_width, inner), stddev=0.3),
+        "conv_b": jnp.zeros((inner,), jnp.float32),
+        "x_proj": init_linear(kg(), inner, dt_rank + 2 * n),
+        "dt_proj": {"w": normal_init(kg(), (dt_rank, inner), stddev=dt_rank ** -0.5),
+                    "b": jnp.log(jnp.exp(jnp.exp(
+                        jax.random.uniform(kg(), (inner,), minval=math.log(1e-3),
+                                           maxval=math.log(1e-1)))) - 1.0 + 1e-9)},
+        "A_log": jnp.log(a),
+        "D": jnp.ones((inner,), jnp.float32),
+        "out_proj": init_linear(kg(), inner, d,
+                                stddev=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _mamba_conv_train(p, xi):
+    """Causal depthwise conv over time. xi: (B, S, inner)."""
+    w = p["conv_w"].astype(xi.dtype)                            # (W, inner)
+    width = w.shape[0]
+    xp = jnp.pad(xi, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xi)
+    for i in range(width):                                      # tiny static loop
+        out = out + xp[:, i:i + xi.shape[1]] * w[i]
+    return out + p["conv_b"].astype(xi.dtype)
+
+
+def _mamba_inner(p, cfg, scfg, xi_conv, dt_rank, n):
+    """Common post-conv computation -> (dA, dBx, C_mat). xi_conv: (B,S,inner)."""
+    xi = jax.nn.silu(xi_conv)
+    proj = linear(p["x_proj"], xi)                              # (B,S,dtr+2n)
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"]["w"].astype(xi.dtype) +
+                         p["dt_proj"]["b"].astype(xi.dtype))    # (B,S,inner)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                # (inner, n)
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)         # (B,S,inner,n)
+    dbx = (dt * xi).astype(jnp.float32)[..., None] * bmat.astype(jnp.float32)[:, :, None, :]
+    return xi, da, dbx, cmat
+
+
+def _ssm_comb(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def _mamba_scan_chunked(p, cfg, scfg, xi_conv, h0, chunk: int, dt_rank: int,
+                        n: int):
+    """Chunked selective scan, memory-lean (§Perf iteration 1).
+
+    The per-position projections (x_proj / dt_proj) and the discretised
+    (dA, dBx) tensors are computed INSIDE the per-chunk step and the step is
+    ``jax.checkpoint``-ed, so the f32 (B,S,inner,n) tensors — 34 GB/device
+    for jamba train_4k — are never fully live and the backward saves only
+    the (B,inner,n) chunk-boundary states plus the bf16 chunk inputs.
+
+    xi_conv: (B,S,inner) post-conv pre-silu. Returns (y (B,S,inner) f32
+    including the D skip term, h_last).
+    """
+    b, s, inner = xi_conv.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        xi_conv = jnp.pad(xi_conv, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    xi_c = xi_conv.reshape(b, nc, chunk, inner).swapaxes(0, 1)  # (nc,B,C,in)
+    # identity-mask for padded tail positions: dA -> 1, dBx -> 0, so padding
+    # never perturbs the recurrent state handed to decode.
+    valid = (jnp.arange(nc * chunk) < s).reshape(nc, 1, chunk, 1, 1)
+
+    def chunk_step(h0, xs):
+        xi_k, v_k = xs
+        _, da_k, dbx_k, c_k = _mamba_inner(p, cfg, scfg, xi_k, dt_rank, n)
+        da_k = jnp.where(v_k, da_k, 1.0)
+        dbx_k = jnp.where(v_k, dbx_k, 0.0)
+        cum_a, cum_b = jax.lax.associative_scan(_ssm_comb, (da_k, dbx_k),
+                                                axis=1)
+        h = cum_a * h0[:, None] + cum_b                         # (B,C,inner,n)
+        y = jnp.einsum("bsin,bsn->bsi", h, c_k.astype(jnp.float32))
+        return h[:, -1], y.astype(xi_k.dtype)
+
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0, (xi_c, valid))
+    y = ys.swapaxes(0, 1).reshape(b, nc * chunk, inner)[:, :s]
+    return y, h_last
+
+
+def _mamba_full(p, cfg: ArchConfig, scfg: SSMConfig, x, h0, chunk: int = 64):
+    """Shared full-sequence path. Returns (out, final_state, conv_tail)."""
+    b, s, d = x.shape
+    n = scfg.state_dim
+    dt_rank = scfg.dt_rank or max(1, math.ceil(d / 16))
+    xz = linear(p["in_proj"], x)
+    xi_raw, z = jnp.split(xz, 2, axis=-1)
+    xi_conv = _mamba_conv_train(p, xi_raw)
+    y, h_last = _mamba_scan_chunked(p, cfg, scfg, xi_conv, h0, chunk,
+                                    dt_rank, n)
+    xi = jax.nn.silu(xi_conv)
+    y = y.astype(x.dtype) + xi * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    w = scfg.conv_width
+    conv_tail = jnp.pad(xi_raw, ((0, 0), (w - 1, 0), (0, 0)))[:, -(w - 1):]
+    return linear(p["out_proj"], y), h_last, conv_tail
+
+
+def mamba_train(p, cfg: ArchConfig, scfg: SSMConfig, x, chunk: int = 64):
+    """x: (B, S, d) -> (B, S, d). Chunked associative scan over time."""
+    inner = scfg.expand * cfg.d_model
+    h0 = jnp.zeros((x.shape[0], inner, scfg.state_dim), jnp.float32)
+    out, _, _ = _mamba_full(p, cfg, scfg, x, h0, chunk)
+    return out
+
+
+def init_mamba_cache(cfg: ArchConfig, scfg: SSMConfig, batch: int, dtype=jnp.float32):
+    inner = scfg.expand * cfg.d_model
+    return {"conv": jnp.zeros((batch, scfg.conv_width - 1, inner), dtype),
+            "ssm": jnp.zeros((batch, inner, scfg.state_dim), jnp.float32)}
+
+
+def mamba_prefill(p, cfg: ArchConfig, scfg: SSMConfig, x, cache: Dict, chunk: int = 64):
+    """Full-sequence pass that also leaves the recurrent state in the cache."""
+    out, h_last, conv_tail = _mamba_full(p, cfg, scfg, x, cache["ssm"], chunk)
+    return out, {"conv": conv_tail.astype(cache["conv"].dtype), "ssm": h_last}
+
+
+def mamba_decode(p, cfg: ArchConfig, scfg: SSMConfig, x, cache: Dict):
+    """x: (B, 1, d). O(1) step via the recurrent form."""
+    b, _, d = x.shape
+    inner = scfg.expand * d
+    n = scfg.state_dim
+    dt_rank = scfg.dt_rank or max(1, math.ceil(d / 16))
+    xz = linear(p["in_proj"], x)
+    xi_raw, z = jnp.split(xz, 2, axis=-1)                       # (B,1,inner)
+    conv_buf = jnp.concatenate([cache["conv"].astype(x.dtype), xi_raw], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    xi = jnp.einsum("bwi,wi->bi", conv_buf, w)[:, None] + p["conv_b"].astype(x.dtype)
+    xi, da, dbx, cmat = _mamba_inner(p, cfg, scfg, xi, dt_rank, n)
+    h = da[:, 0] * cache["ssm"] + dbx[:, 0]                     # (B, inner, n)
+    y = jnp.einsum("bin,bn->bi", h, cmat[:, 0].astype(jnp.float32))[:, None].astype(x.dtype)
+    y = y + xi * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return linear(p["out_proj"], y), {"conv": conv_buf[:, 1:].astype(cache["conv"].dtype),
+                                      "ssm": h}
+
+
+# ======================================================================
+# xLSTM blocks (mLSTM: matrix memory; sLSTM: scalar memory w/ recurrence)
+def init_mlstm(key, cfg: ArchConfig, scfg: SSMConfig):
+    kg = KeyGen(key)
+    d = cfg.d_model
+    inner = scfg.expand * d
+    nh = scfg.mlstm_heads
+    dh = inner // nh
+    return {
+        "up": init_linear(kg(), d, 2 * inner),
+        "wq": init_linear(kg(), inner, inner),
+        "wk": init_linear(kg(), inner, inner),
+        "wv": init_linear(kg(), inner, inner),
+        "w_if": init_linear(kg(), inner, 2 * nh, bias=True),
+        "down": init_linear(kg(), inner, d, stddev=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def init_mlstm_cache(cfg: ArchConfig, scfg: SSMConfig, batch: int):
+    inner = scfg.expand * cfg.d_model
+    nh = scfg.mlstm_heads
+    dh = inner // nh
+    return {"C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+def _mlstm_scan(qkvif, cache, nh, dh, chunk: int = 64):
+    """Sequential stabilized mLSTM recurrence, chunk-checkpointed (§Perf:
+    a flat scan saves the (B,nh,dh,dh) matrix memory per STEP for backward
+    — 77 GB for xlstm train_4k; checkpointing per 64-step chunk saves only
+    chunk-boundary states and recomputes inside the chunk).
+
+    Shapes per step: (B, nh, dh)."""
+    q, k, v, igate, fgate = qkvif                              # (B,S,nh,dh) x3, (B,S,nh) x2
+    b, s = q.shape[:2]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    nc = (s + pad) // chunk
+
+    def prep(a):
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        return (a.reshape(b, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+                .swapaxes(1, 2))                               # (nc, C, B, ...)
+
+    xs_c = tuple(prep(a) for a in (q, k, v, igate, fgate))
+    # identity for padded steps: f_p = 1 (ft = 0, m unchanged), i_p = 0
+    valid = (jnp.arange(nc * chunk) < s).reshape(nc, chunk, 1, 1)
+
+    def step(carry, xs):
+        C, nvec, m = carry
+        qt, kt, vt, it, ft, v_t = xs                           # (B,nh,dh)...
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        i_p = jnp.where(v_t, i_p, 0.0)
+        f_p = jnp.where(v_t, f_p, 1.0)
+        m_new = jnp.where(v_t, m_new, m)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])               # (B,nh,dh,dh)
+        nvec = f_p[..., None] * nvec + i_p[..., None] * kt
+        num = jnp.einsum("bhij,bhj->bhi", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", nvec, qt)), 1.0)
+        h = num / den[..., None]
+        return (C, nvec, m_new), h
+
+    def chunk_fn(carry, xs_k):
+        return jax.lax.scan(step, carry, xs_k)
+
+    (C, nvec, m), hs = jax.lax.scan(
+        jax.checkpoint(chunk_fn), (cache["C"], cache["n"], cache["m"]),
+        xs_c + (valid,))
+    hs = hs.reshape(nc * chunk, b, nh, dh)[:s]                 # (S, B, nh, dh)
+    return hs.swapaxes(0, 1), {"C": C, "n": nvec, "m": m}
+
+
+def _mlstm_qkvif(p, cfg, scfg, x):
+    b, s, d = x.shape
+    inner = scfg.expand * d
+    nh = scfg.mlstm_heads
+    dh = inner // nh
+    xz = linear(p["up"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = linear(p["wq"], xi).reshape(b, s, nh, dh).astype(jnp.float32) / math.sqrt(dh)
+    k = linear(p["wk"], xi).reshape(b, s, nh, dh).astype(jnp.float32)
+    v = linear(p["wv"], xi).reshape(b, s, nh, dh).astype(jnp.float32)
+    gif = linear(p["w_if"], xi).astype(jnp.float32)
+    igate, fgate = jnp.split(gif, 2, axis=-1)                  # (B,S,nh)
+    fgate = jax.nn.log_sigmoid(fgate)
+    return (q, k, v, igate, fgate), z, nh, dh
+
+
+def mlstm_train(p, cfg: ArchConfig, scfg: SSMConfig, x):
+    cache = init_mlstm_cache(cfg, scfg, x.shape[0])
+    y, _ = mlstm_prefill(p, cfg, scfg, x, cache)
+    return y
+
+
+def mlstm_prefill(p, cfg: ArchConfig, scfg: SSMConfig, x, cache: Dict):
+    qkvif, z, nh, dh = _mlstm_qkvif(p, cfg, scfg, x)
+    hs, cache = _mlstm_scan(qkvif, cache, nh, dh)              # (B,S,nh,dh)
+    b, s = x.shape[:2]
+    y = hs.reshape(b, s, nh * dh).astype(x.dtype) * jax.nn.silu(z)
+    return linear(p["down"], y), cache
+
+
+def mlstm_decode(p, cfg: ArchConfig, scfg: SSMConfig, x, cache: Dict):
+    return mlstm_prefill(p, cfg, scfg, x, cache)
+
+
+def init_slstm(key, cfg: ArchConfig, scfg: SSMConfig):
+    kg = KeyGen(key)
+    d = cfg.d_model
+    inner = scfg.expand * d
+    nh = scfg.mlstm_heads
+    dh = inner // nh
+    return {
+        "up": init_linear(kg(), d, inner),
+        "w_gates": init_linear(kg(), inner, 4 * inner, bias=True),
+        "r_gates": normal_init(kg(), (nh, dh, 4 * dh), stddev=1 / math.sqrt(dh)),
+        "down": init_linear(kg(), inner, d, stddev=0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def init_slstm_cache(cfg: ArchConfig, scfg: SSMConfig, batch: int):
+    inner = scfg.expand * cfg.d_model
+    nh = scfg.mlstm_heads
+    dh = inner // nh
+    z = lambda: jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, nh, dh), -1e30, jnp.float32)}
+
+
+def slstm_prefill(p, cfg: ArchConfig, scfg: SSMConfig, x, cache: Dict):
+    b, s, d = x.shape
+    inner = scfg.expand * d
+    nh = scfg.mlstm_heads
+    dh = inner // nh
+    xi = linear(p["up"], x)
+    wx = linear(p["w_gates"], xi).reshape(b, s, nh, 4 * dh).astype(jnp.float32)
+    rk = p["r_gates"].astype(jnp.float32)
+
+    def step(carry, wxt):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhj,hjk->bhk", h, rk)                # (B,nh,4dh)
+        zt, it, ft, ot = jnp.split(wxt + rec, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        ft = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        c = f_p * c + i_p * zt
+        n = f_p * n + i_p
+        h = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    (c, n, h, m), hs = jax.lax.scan(
+        step, (cache["c"], cache["n"], cache["h"], cache["m"]), wx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(b, s, inner).astype(x.dtype)
+    return linear(p["down"], y), {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_train(p, cfg, scfg, x):
+    y, _ = slstm_prefill(p, cfg, scfg, x, init_slstm_cache(cfg, scfg, x.shape[0]))
+    return y
+
+
+def slstm_decode(p, cfg, scfg, x, cache):
+    return slstm_prefill(p, cfg, scfg, x, cache)

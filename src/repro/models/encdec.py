@@ -1,0 +1,206 @@
+"""Whisper-style encoder–decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment carve-out: the caller
+provides precomputed frame embeddings (B, T_enc, d_model). We implement the
+full encoder transformer (bidirectional), the causal decoder with
+self-attention KV cache + cross-attention to the encoder output, and the
+teacher-forced training loss. Positional encoding is sinusoidal (adaptation:
+Whisper uses learned tables capped at 1500/448; sinusoidal extends to the
+assignment's stress shapes — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ArchConfig
+from repro.common.pytree import KeyGen, normal_init
+from repro.sharding.context import constrain
+from repro.models import attention as attn_lib
+from repro.models import blocks as B
+from repro.models.layers import (embed, init_embedding, init_ffn, ffn,
+                                 init_layernorm, layernorm, linear)
+
+
+def sinusoid_pos(positions, d: int, dtype=jnp.float32):
+    """positions: (...,) -> (..., d)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+def _init_enc_layer(cfg: ArchConfig, key):
+    kg = KeyGen(key)
+    return {
+        "ln1": init_layernorm(cfg.d_model),
+        "attn": B.init_attn(kg(), cfg),
+        "ln2": init_layernorm(cfg.d_model),
+        "ffn": init_ffn(kg(), cfg.d_model, cfg.d_ff, "gelu"),
+    }
+
+
+def _init_dec_layer(cfg: ArchConfig, key):
+    kg = KeyGen(key)
+    return {
+        "ln1": init_layernorm(cfg.d_model),
+        "self_attn": B.init_attn(kg(), cfg),
+        "ln2": init_layernorm(cfg.d_model),
+        "cross_attn": B.init_cross_attn(kg(), cfg),
+        "ln3": init_layernorm(cfg.d_model),
+        "ffn": init_ffn(kg(), cfg.d_model, cfg.d_ff, "gelu"),
+    }
+
+
+def init_encdec(cfg: ArchConfig, key, dtype=jnp.float32) -> Dict:
+    kg = KeyGen(key)
+    enc_keys = jax.random.split(kg(), cfg.encoder_layers)
+    dec_keys = jax.random.split(kg(), cfg.num_layers)
+    params = {
+        "embed": init_embedding(kg(), cfg.padded_vocab, cfg.d_model),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(cfg, k))(enc_keys),
+        "enc_ln": init_layernorm(cfg.d_model),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(cfg, k))(dec_keys),
+        "dec_ln": init_layernorm(cfg.d_model),
+    }
+    if dtype != jnp.float32:
+        from repro.common.pytree import cast_tree
+        params = cast_tree(params, dtype)
+    return params
+
+
+# ----------------------------------------------------------------------
+def encode(params, cfg: ArchConfig, frames, compute_dtype=jnp.float32):
+    """frames: (B, T_enc, d_model) stub embeddings -> encoder output."""
+    b, t, _ = frames.shape
+    x = frames.astype(compute_dtype) + sinusoid_pos(jnp.arange(t), cfg.d_model,
+                                                    compute_dtype)
+
+    def layer_fn(x, lp):
+        h = layernorm(lp["ln1"], x, cfg.norm_eps)
+        x = x + B.attn_train(lp["attn"], cfg, h, causal=False)
+        h = layernorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + ffn(lp["ffn"], h, "gelu")
+        return constrain(x), None
+
+    x, _ = jax.lax.scan(layer_fn, x, params["enc_layers"])
+    return layernorm(params["enc_ln"], x, cfg.norm_eps)
+
+
+def _dec_embed(params, cfg, tokens, pos0, dtype):
+    x = embed(params["embed"], tokens, dtype=dtype)
+    pos = jnp.arange(tokens.shape[1]) + pos0
+    return x + sinusoid_pos(pos, cfg.d_model, dtype)
+
+
+def _head(params, cfg: ArchConfig, x):
+    h = layernorm(params["dec_ln"], x, cfg.norm_eps)
+    logits = h @ params["embed"]["table"].astype(h.dtype).T
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+    return logits
+
+
+def encdec_logits(params, cfg: ArchConfig, frames, tokens,
+                  compute_dtype=jnp.float32):
+    """Teacher-forced decoder logits (training path)."""
+    enc = encode(params, cfg, frames, compute_dtype)
+    x = _dec_embed(params, cfg, tokens, 0, compute_dtype)
+
+    def layer_fn(x, lp):
+        h = layernorm(lp["ln1"], x, cfg.norm_eps)
+        x = x + B.attn_train(lp["self_attn"], cfg, h, causal=True)
+        h = layernorm(lp["ln2"], x, cfg.norm_eps)
+        kv = B.cross_attn_kv(lp["cross_attn"], cfg, enc)
+        x = x + B.cross_attn_apply(lp["cross_attn"], cfg, h, kv)
+        h = layernorm(lp["ln3"], x, cfg.norm_eps)
+        x = x + ffn(lp["ffn"], h, "gelu")
+        return constrain(x), None
+
+    x, _ = jax.lax.scan(layer_fn, x, params["dec_layers"])
+    return _head(params, cfg, x)
+
+
+def encdec_loss(params, cfg: ArchConfig, frames, tokens, labels,
+                compute_dtype=jnp.float32):
+    logits = encdec_logits(params, cfg, frames, tokens, compute_dtype).astype(jnp.float32)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    loss = ((logz - gold) * valid).sum() / jnp.maximum(valid.sum(), 1)
+    return loss, {"nll": loss, "ntokens": valid.sum().astype(jnp.float32)}
+
+
+# ----------------------------------------------------------------------
+# serving: prefill builds self-KV + cross-KV caches; decode steps one token.
+def init_encdec_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                      enc_len: int, dtype=jnp.bfloat16) -> Dict:
+    hd = cfg.resolved_head_dim
+    L = cfg.num_layers
+    self_kv = {"k": jnp.zeros((L, batch, cache_len, cfg.num_kv_heads, hd), dtype),
+               "v": jnp.zeros((L, batch, cache_len, cfg.num_kv_heads, hd), dtype)}
+    cross_kv = {"k": jnp.zeros((L, batch, enc_len, cfg.num_kv_heads, hd), dtype),
+                "v": jnp.zeros((L, batch, enc_len, cfg.num_kv_heads, hd), dtype)}
+    return {"self": self_kv, "cross": cross_kv, "pos": jnp.zeros((), jnp.int32)}
+
+
+def encdec_prefill(params, cfg: ArchConfig, frames, tokens, cache,
+                   compute_dtype=jnp.bfloat16):
+    enc = encode(params, cfg, frames, compute_dtype)
+    x = _dec_embed(params, cfg, tokens, 0, compute_dtype)
+    s = tokens.shape[1]
+
+    def layer_fn(carry, xs):
+        x = carry
+        lp, sc, cc = xs
+        h = layernorm(lp["ln1"], x, cfg.norm_eps)
+        y, sc = B.attn_prefill(lp["self_attn"], cfg, h, sc)
+        x = x + y
+        h = layernorm(lp["ln2"], x, cfg.norm_eps)
+        kv = B.cross_attn_kv(lp["cross_attn"], cfg, enc)
+        cc = {"k": kv["k"].astype(cc["k"].dtype), "v": kv["v"].astype(cc["v"].dtype)}
+        x = x + B.cross_attn_apply(lp["cross_attn"], cfg, h, kv)
+        h = layernorm(lp["ln3"], x, cfg.norm_eps)
+        x = x + ffn(lp["ffn"], h, "gelu")
+        return constrain(x), (sc, cc)
+
+    x, (self_kv, cross_kv) = jax.lax.scan(
+        layer_fn, x, (params["dec_layers"], cache["self"], cache["cross"]))
+    logits = _head(params, cfg, x[:, -1:])
+    return logits, {"self": self_kv, "cross": cross_kv,
+                    "pos": jnp.asarray(s, jnp.int32)}
+
+
+def encdec_decode(params, cfg: ArchConfig, cache, token,
+                  compute_dtype=jnp.bfloat16):
+    """token: (B, 1)."""
+    pos = cache["pos"]
+    x = _dec_embed(params, cfg, token, pos, compute_dtype)
+
+    def layer_fn(carry, xs):
+        x = carry
+        lp, sc, cc = xs
+        h = layernorm(lp["ln1"], x, cfg.norm_eps)
+        y, sc = B.attn_decode(lp["self_attn"], cfg, h, sc, pos)
+        x = x + y
+        h = layernorm(lp["ln2"], x, cfg.norm_eps)
+        b = h.shape[0]
+        hd = cfg.resolved_head_dim
+        q = linear(lp["cross_attn"]["wq"], h).reshape(b, 1, cfg.num_heads, hd)
+        o = attn_lib.decode_attention(q, cc["k"].astype(h.dtype),
+                                      cc["v"].astype(h.dtype), cc["k"].shape[1])
+        x = x + linear(lp["cross_attn"]["wo"], o.reshape(b, 1, -1))
+        h = layernorm(lp["ln3"], x, cfg.norm_eps)
+        x = x + ffn(lp["ffn"], h, "gelu")
+        return constrain(x), sc
+
+    x, self_kv = jax.lax.scan(
+        layer_fn, x, (params["dec_layers"], cache["self"], cache["cross"]))
+    logits = _head(params, cfg, x)
+    return logits, {"self": self_kv, "cross": cache["cross"], "pos": pos + 1}

@@ -1,0 +1,115 @@
+"""Core layers: norms, rotary embeddings, linear/embedding init+apply, FFNs.
+
+Everything is functional: ``init_*`` builds a params subtree, ``apply`` style
+functions are pure. Params live in nested dicts so they stack cleanly along a
+leading layer axis for ``lax.scan`` over layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import KeyGen, lecun_init, normal_init, ones_init, zeros_init
+
+
+# ----------------------------------------------------------------------
+# norms
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(dt)
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mean), axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# ----------------------------------------------------------------------
+# linear / embedding
+def init_linear(key, d_in: int, d_out: int, bias: bool = False, stddev: Optional[float] = None):
+    kg = KeyGen(key)
+    std = stddev if stddev is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": normal_init(kg(), (d_in, d_out), stddev=std)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_embedding(key, vocab: int, d: int):
+    return {"table": normal_init(key, (vocab, d), stddev=0.02)}
+
+
+def embed(p, tokens, dtype=jnp.float32):
+    return p["table"].astype(dtype)[tokens]
+
+
+# ----------------------------------------------------------------------
+# rotary position embeddings
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# activations / FFN
+def mish(x):
+    return x * jnp.tanh(jax.nn.softplus(x))
+
+
+_ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "geglu": jax.nn.gelu, "mish": mish,
+        "relu": jax.nn.relu, "tanh": jnp.tanh}
+
+
+def init_ffn(key, d_model: int, d_ff: int, activation: str = "silu", bias: bool = False):
+    """Gated FFN (llama silu-gate / gemma geglu) or plain 2-layer (gelu)."""
+    kg = KeyGen(key)
+    gated = activation in ("silu", "geglu")
+    p = {"up": init_linear(kg(), d_model, d_ff, bias=bias),
+         "down": init_linear(kg(), d_ff, d_model, bias=bias)}
+    if gated:
+        p["gate"] = init_linear(kg(), d_model, d_ff, bias=bias)
+    return p
+
+
+def ffn(p, x, activation: str = "silu"):
+    act = _ACT[activation]
+    if "gate" in p:
+        h = act(linear(p["gate"], x)) * linear(p["up"], x)
+    else:
+        h = act(linear(p["up"], x))
+    return linear(p["down"], h)

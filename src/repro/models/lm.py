@@ -1,0 +1,296 @@
+"""Unified decoder-only LM covering dense / MoE / SSM / hybrid / VLM families.
+
+The layer stack is organised into *periods*: a period is the smallest
+repeating pattern of blocks (1 layer for homogeneous stacks; 8 for Jamba's
+7-Mamba+1-attention interleave; 4 for xLSTM's 3-mLSTM+1-sLSTM). Parameters of
+all periods are stacked along a leading axis and the forward pass is a single
+``lax.scan`` over periods — compile time is O(period), not O(depth).
+
+Public API (all pure functions):
+
+    period_spec(cfg)                 -> ((mixer, ffn), ...) per layer in period
+    init_lm(cfg, key, dtype)         -> params
+    lm_loss(params, cfg, tokens, labels, ...)         -> scalar loss, metrics
+    lm_logits(params, cfg, tokens, frontend=None)     -> (B, S, padded_vocab)
+    init_cache(cfg, batch, cache_len, dtype)          -> cache pytree
+    lm_prefill(params, cfg, tokens, cache, frontend=None) -> (logits_last, cache)
+    lm_decode(params, cfg, cache, token)              -> (logits, cache)
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ArchConfig
+from repro.common.pytree import KeyGen, normal_init
+from repro.sharding.context import constrain
+from repro.models import blocks as B
+from repro.models.layers import embed, init_embedding, init_rmsnorm, init_ffn, ffn, linear, rmsnorm
+
+
+# ----------------------------------------------------------------------
+def period_spec(cfg: ArchConfig) -> Tuple[Tuple[str, str], ...]:
+    """Per-layer (mixer, ffn) pattern within one period."""
+    if cfg.layer_pattern == "attn":
+        ffn_kind = "moe" if cfg.moe is not None else "dense"
+        if cfg.moe is not None and cfg.moe.layer_period > 1:
+            return tuple(
+                ("attn", "moe" if (i % cfg.moe.layer_period == cfg.moe.layer_period - 1)
+                 else "dense")
+                for i in range(cfg.moe.layer_period))
+        return (("attn", ffn_kind),)
+    if cfg.layer_pattern == "jamba":
+        out = []
+        for i in range(cfg.attn_period):
+            mixer = "attn" if i == cfg.attn_period - 1 else "mamba"
+            f = "moe" if (i % 2 == 1 and cfg.moe is not None) else "dense"
+            out.append((mixer, f))
+        return tuple(out)
+    if cfg.layer_pattern == "mamba":
+        return (("mamba", "dense" if cfg.d_ff else "none"),)
+    if cfg.layer_pattern == "xlstm":
+        return (("mlstm", "none"), ("mlstm", "none"), ("mlstm", "none"), ("slstm", "none"))
+    raise ValueError(cfg.layer_pattern)
+
+
+def n_periods(cfg: ArchConfig) -> int:
+    plen = len(period_spec(cfg))
+    assert cfg.num_layers % plen == 0, (cfg.name, cfg.num_layers, plen)
+    return cfg.num_layers // plen
+
+
+# ----------------------------------------------------------------------
+def _init_period(cfg: ArchConfig, key) -> Dict:
+    kg = KeyGen(key)
+    p: Dict = {}
+    for i, (mixer, f) in enumerate(period_spec(cfg)):
+        p[f"norm{i}_mix"] = init_rmsnorm(cfg.d_model)
+        if mixer == "attn":
+            p[f"blk{i}_attn"] = B.init_attn(kg(), cfg)
+        elif mixer == "mamba":
+            p[f"blk{i}_mamba"] = B.init_mamba(kg(), cfg, cfg.ssm)
+        elif mixer == "mlstm":
+            p[f"blk{i}_mlstm"] = B.init_mlstm(kg(), cfg, cfg.ssm)
+        elif mixer == "slstm":
+            p[f"blk{i}_slstm"] = B.init_slstm(kg(), cfg, cfg.ssm)
+        if f == "dense":
+            p[f"norm{i}_ffn"] = init_rmsnorm(cfg.d_model)
+            p[f"blk{i}_ffn"] = init_ffn(kg(), cfg.d_model, cfg.d_ff, cfg.activation)
+        elif f == "moe":
+            p[f"norm{i}_ffn"] = init_rmsnorm(cfg.d_model)
+            p[f"blk{i}_moe"] = B.init_moe(kg(), cfg, cfg.moe)
+    return p
+
+
+def init_lm(cfg: ArchConfig, key, dtype=jnp.float32) -> Dict:
+    kg = KeyGen(key)
+    np_ = n_periods(cfg)
+    keys = jax.random.split(kg(), np_)
+    periods = jax.vmap(lambda k: _init_period(cfg, k))(keys)
+    params = {
+        "embed": init_embedding(kg(), cfg.padded_vocab, cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+        "periods": periods,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": normal_init(kg(), (cfg.d_model, cfg.padded_vocab),
+                                              stddev=1 / math.sqrt(cfg.d_model))}
+    if cfg.frontend != "none":
+        # projector from stub frontend embeddings into d_model
+        fd = cfg.frontend_dim or cfg.d_model
+        params["frontend_proj"] = {"w": normal_init(kg(), (fd, cfg.d_model),
+                                                    stddev=1 / math.sqrt(fd))}
+    if dtype != jnp.float32:
+        from repro.common.pytree import cast_tree
+        params = cast_tree(params, dtype)
+    return params
+
+
+# ----------------------------------------------------------------------
+def _mixer_train(pp, cfg: ArchConfig, i: int, mixer: str, x, aux):
+    h = rmsnorm(pp[f"norm{i}_mix"], x, cfg.norm_eps)
+    if mixer == "attn":
+        y = B.attn_train(pp[f"blk{i}_attn"], cfg, h, causal=True,
+                         window=cfg.sliding_window)
+    elif mixer == "mamba":
+        y = B.mamba_train(pp[f"blk{i}_mamba"], cfg, cfg.ssm, h)
+    elif mixer == "mlstm":
+        y = B.mlstm_train(pp[f"blk{i}_mlstm"], cfg, cfg.ssm, h)
+    elif mixer == "slstm":
+        y = B.slstm_train(pp[f"blk{i}_slstm"], cfg, cfg.ssm, h)
+    return x + y, aux
+
+
+def _ffn_apply(pp, cfg: ArchConfig, i: int, f: str, x, aux,
+               moe_dropless: bool = False):
+    if f == "none":
+        return x, aux
+    h = rmsnorm(pp[f"norm{i}_ffn"], x, cfg.norm_eps)
+    if f == "dense":
+        y = ffn(pp[f"blk{i}_ffn"], h, cfg.activation)
+    else:
+        y, moe_aux = B.moe_apply(pp[f"blk{i}_moe"], cfg, cfg.moe, h,
+                                 dropless=moe_dropless)
+        aux = aux + moe_aux
+    return x + y, aux
+
+
+def _embed_tokens(params, cfg: ArchConfig, tokens, frontend, dtype):
+    x = embed(params["embed"], tokens, dtype=dtype)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    if frontend is not None:
+        fe = frontend.astype(dtype) @ params["frontend_proj"]["w"].astype(dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    return constrain(x)
+
+
+def _head(params, cfg: ArchConfig, x):
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["table"].astype(h.dtype).T
+    else:
+        logits = linear(params["lm_head"], h)
+    # mask padding vocab entries
+    if cfg.padded_vocab != cfg.vocab_size:
+        neg = jnp.asarray(-1e30, logits.dtype)
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, neg, logits)
+    return logits
+
+
+def lm_logits(params, cfg: ArchConfig, tokens, frontend=None,
+              compute_dtype=jnp.float32, remat: bool = False,
+              moe_dropless: bool = False):
+    """Full-sequence causal logits (training path).
+
+    ``moe_dropless=True`` gives the slicing-invariant exact MoE forward
+    (matches prefill+decode token for token); the default keeps the
+    capacity-dropped training dispatch."""
+    x = _embed_tokens(params, cfg, tokens, frontend, compute_dtype)
+    spec = period_spec(cfg)
+
+    def period_fn(carry, pp):
+        x, aux = carry
+        for i, (mixer, f) in enumerate(spec):
+            x, aux = _mixer_train(pp, cfg, i, mixer, x, aux)
+            x, aux = _ffn_apply(pp, cfg, i, f, x, aux, moe_dropless)
+        return (constrain(x), aux), None
+
+    if remat:
+        period_fn = jax.checkpoint(period_fn)
+    (x, aux), _ = jax.lax.scan(period_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["periods"])
+    return _head(params, cfg, x), aux
+
+
+def lm_loss(params, cfg: ArchConfig, tokens, labels, frontend=None,
+            compute_dtype=jnp.float32, remat: bool = False):
+    """Next-token cross entropy. labels: (B, S) with -100 = ignore."""
+    logits, aux = lm_logits(params, cfg, tokens, frontend, compute_dtype, remat)
+    if frontend is not None:
+        logits = logits[:, frontend.shape[1]:]
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    loss = nll.sum() / jnp.maximum(valid.sum(), 1)
+    return loss + aux, {"nll": loss, "aux": aux,
+                        "ntokens": valid.sum().astype(jnp.float32)}
+
+
+# ----------------------------------------------------------------------
+# caches
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16) -> Dict:
+    """cache_len: attention KV capacity. With cfg.sliding_window > 0 and
+    cache_len >= window, attention caches are rolling ``window``-sized rings."""
+    spec = period_spec(cfg)
+    np_ = n_periods(cfg)
+    attn_len = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    per: Dict = {}
+    for i, (mixer, _f) in enumerate(spec):
+        if mixer == "attn":
+            per[f"blk{i}_attn"] = B.init_attn_cache(cfg, batch, attn_len, dtype)
+        elif mixer == "mamba":
+            per[f"blk{i}_mamba"] = B.init_mamba_cache(cfg, cfg.ssm, batch, dtype)
+        elif mixer == "mlstm":
+            per[f"blk{i}_mlstm"] = B.init_mlstm_cache(cfg, cfg.ssm, batch)
+        elif mixer == "slstm":
+            per[f"blk{i}_slstm"] = B.init_slstm_cache(cfg, cfg.ssm, batch)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (np_,) + x.shape), per)
+    return {"periods": stacked, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _run_cached(params, cfg: ArchConfig, x, cache, pos, *, decode: bool,
+                moe_dropless: bool = True):
+    """Shared prefill/decode scan over periods. x: (B, S, d)."""
+    spec = period_spec(cfg)
+
+    def period_fn(carry, xs):
+        x, aux = carry
+        pp, pc = xs
+        new_pc = dict(pc)
+        for i, (mixer, f) in enumerate(spec):
+            with jax.named_scope(f"blk{i}_{mixer}"):
+                h = rmsnorm(pp[f"norm{i}_mix"], x, cfg.norm_eps)
+                key = f"blk{i}_{mixer}"
+                if mixer == "attn":
+                    if decode:
+                        y, new_pc[key] = B.attn_decode(pp[key], cfg, h,
+                                                       pc[key], pos,
+                                                       window=cfg.sliding_window)
+                    else:
+                        y, new_pc[key] = B.attn_prefill(pp[key], cfg, h,
+                                                        pc[key],
+                                                        window=cfg.sliding_window)
+                elif mixer == "mamba":
+                    fn = B.mamba_decode if decode else B.mamba_prefill
+                    y, new_pc[key] = fn(pp[key], cfg, cfg.ssm, h, pc[key])
+                elif mixer == "mlstm":
+                    y, new_pc[key] = B.mlstm_prefill(pp[key], cfg, cfg.ssm, h,
+                                                     pc[key])
+                elif mixer == "slstm":
+                    y, new_pc[key] = B.slstm_prefill(pp[key], cfg, cfg.ssm, h,
+                                                     pc[key])
+                x = x + y
+            with jax.named_scope(f"blk{i}_ffn_{f}"):
+                x, aux = _ffn_apply(pp, cfg, i, f, x, aux, moe_dropless)
+        return (constrain(x), aux), new_pc
+
+    (x, _aux), new_periods = jax.lax.scan(
+        period_fn, (x, jnp.zeros((), jnp.float32)),
+        (params["periods"], cache["periods"]))
+    return x, new_periods
+
+
+def lm_prefill(params, cfg: ArchConfig, tokens, cache, frontend=None,
+               compute_dtype=jnp.bfloat16, moe_dropless: bool = True):
+    """Process the prompt; returns last-position logits + filled cache.
+
+    MoE defaults to the exact dropless dispatch (consistent with decode);
+    the large-shape dry-run passes ``moe_dropless=False`` to keep the
+    capacity-bounded e/k-cheaper expert einsum."""
+    x = _embed_tokens(params, cfg, tokens, frontend, compute_dtype)
+    s = x.shape[1]
+    x, new_periods = _run_cached(params, cfg, x, cache, jnp.zeros((), jnp.int32),
+                                 decode=False, moe_dropless=moe_dropless)
+    logits = _head(params, cfg, x[:, -1:])
+    return logits, {"periods": new_periods, "pos": jnp.asarray(s, jnp.int32)}
+
+
+def lm_decode(params, cfg: ArchConfig, cache, token, compute_dtype=jnp.bfloat16,
+              moe_dropless: bool = True):
+    """token: (B, 1) -> (logits (B, 1, V), cache')."""
+    x = _embed_tokens(params, cfg, token, None, compute_dtype)
+    pos = cache["pos"]
+    x, new_periods = _run_cached(params, cfg, x, cache, pos, decode=True,
+                                 moe_dropless=moe_dropless)
+    logits = _head(params, cfg, x)
+    return logits, {"periods": new_periods, "pos": pos + 1}

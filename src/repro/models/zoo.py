@@ -1,0 +1,99 @@
+"""Model zoo: uniform interface over all architecture families.
+
+    model = build_model(cfg)
+    params = model.init(key, dtype)
+    loss, metrics = model.loss(params, batch)        # training
+    logits, cache = model.prefill(params, batch)     # inference prefill
+    logits, cache = model.decode(params, cache, token)
+    cache = model.make_cache(batch, cache_len, dtype)
+
+``batch`` is a dict: tokens/labels (+ frames for audio, image_embeds for vlm).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ArchConfig
+from repro.models import encdec as ED
+from repro.models import lm as LM
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    make_cache: Callable[..., Any]
+
+
+def _frontend_of(cfg: ArchConfig, batch: Dict):
+    if cfg.frontend == "vision":
+        return batch["image_embeds"]
+    if cfg.frontend == "audio":
+        return batch.get("frames")
+    return None
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "audio":
+        def init(key, dtype=jnp.float32):
+            return ED.init_encdec(cfg, key, dtype)
+
+        def loss(params, batch, compute_dtype=jnp.float32, remat: bool = False):
+            del remat  # 12+12 layers: fits without activation checkpointing
+            return ED.encdec_loss(params, cfg, batch["frames"], batch["tokens"],
+                                  batch["labels"], compute_dtype)
+
+        def make_cache(batch_size, cache_len, dtype=jnp.bfloat16,
+                       enc_len: Optional[int] = None):
+            return ED.init_encdec_cache(cfg, batch_size, cache_len,
+                                        enc_len or cfg.frontend_tokens, dtype)
+
+        def prefill(params, batch, cache, compute_dtype=jnp.bfloat16,
+                    moe_dropless: bool = True):
+            del moe_dropless  # no MoE in the enc-dec family
+            return ED.encdec_prefill(params, cfg, batch["frames"],
+                                     batch["tokens"], cache, compute_dtype)
+
+        def decode(params, cache, token, compute_dtype=jnp.bfloat16,
+                   moe_dropless: bool = True):
+            del moe_dropless
+            return ED.encdec_decode(params, cfg, cache, token, compute_dtype)
+
+        return Model(cfg, init, loss, prefill, decode, make_cache)
+
+    # decoder-only families (dense / moe / ssm / hybrid / vlm)
+    def init(key, dtype=jnp.float32):
+        return LM.init_lm(cfg, key, dtype)
+
+    def loss(params, batch, compute_dtype=jnp.float32, remat: bool = False):
+        return LM.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                          frontend=_frontend_of(cfg, batch),
+                          compute_dtype=compute_dtype, remat=remat)
+
+    def make_cache(batch_size, cache_len, dtype=jnp.bfloat16, **_kw):
+        # VLM prefill prepends the projected vision-patch embeddings, so the
+        # KV cache must hold frontend_tokens extra positions.
+        if cfg.frontend == "vision":
+            cache_len = cache_len + cfg.frontend_tokens
+        return LM.init_cache(cfg, batch_size, cache_len, dtype)
+
+    def prefill(params, batch, cache, compute_dtype=jnp.bfloat16,
+                moe_dropless: bool = True):
+        return LM.lm_prefill(params, cfg, batch["tokens"], cache,
+                             frontend=_frontend_of(cfg, batch),
+                             compute_dtype=compute_dtype,
+                             moe_dropless=moe_dropless)
+
+    def decode(params, cache, token, compute_dtype=jnp.bfloat16,
+               moe_dropless: bool = True):
+        return LM.lm_decode(params, cfg, cache, token, compute_dtype,
+                            moe_dropless=moe_dropless)
+
+    return Model(cfg, init, loss, prefill, decode, make_cache)

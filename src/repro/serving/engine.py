@@ -1,0 +1,260 @@
+"""In-process edge-serving engine: the paper's Fig.-1 system, executable.
+
+Components (mirroring the paper's implementation, §VI.A.1, minus Docker/NCCL):
+  * ``ServerPool`` — N logical edge servers; each holds at most one loaded
+    model (params on device). Loading/unloading is real work (param init /
+    drop); reuse skips it, exactly the cold-start economics the paper
+    schedules around.
+  * ``Request`` — an AIGC task: (service/arch id, prompt tokens, patches c_k,
+    arrival time). "Inference steps" map to decode steps for LM services.
+  * ``ServingEngine`` — the host loop: maintains the waiting queue, builds
+    the Eq.-6 state from *real* pool state, asks a policy (EAT or baseline)
+    for (execute?, task, steps), gang-allocates c_k servers, runs real
+    prefill+decode on the selected model, and records wall-clock metrics.
+
+Patch parallelism: a c_k-patch task splits its prompt into c_k chunks that
+are prefilled as a batch dimension (the TPU mapping: each chunk lives on one
+mesh slice; on this CPU container they execute as one batched call and we
+account the parallel speedup with the Table-VI model). Decode then proceeds
+from the merged KV cache.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ArchConfig, get_config
+from repro.core import env as EV
+from repro.core import timemodel as TM
+from repro.core.quality import quality_of
+from repro.models.zoo import Model, build_model
+
+
+@dataclass
+class Request:
+    rid: int
+    arch: str
+    prompt: np.ndarray            # (S,) int32
+    patches: int                  # c_k
+    arrive_t: float
+    max_new_tokens: int = 16
+    # filled on completion
+    tokens: Optional[np.ndarray] = None
+    start_t: float = 0.0
+    finish_t: float = 0.0
+    steps: int = 0
+    reused: bool = False
+    quality: float = 0.0
+
+
+@dataclass
+class LogicalServer:
+    sid: int
+    model_name: Optional[str] = None
+    params: Optional[object] = None
+    gang: int = -1                # request id of last gang
+    gang_size: int = 0
+    busy_until: float = 0.0
+
+
+class ServerPool:
+    def __init__(self, num_servers: int):
+        self.servers = [LogicalServer(i) for i in range(num_servers)]
+        self.load_count = 0
+        self.reuse_count = 0
+
+    def idle(self, now: float) -> List[LogicalServer]:
+        return [s for s in self.servers if s.busy_until <= now]
+
+    def find_reusable_gang(self, arch: str, c: int, now: float):
+        """A complete idle gang with matching model and size (paper Eq. 1)."""
+        groups: Dict[int, List[LogicalServer]] = {}
+        for s in self.idle(now):
+            if s.model_name == arch and s.gang_size == c and s.gang >= 0:
+                groups.setdefault(s.gang, []).append(s)
+        for gid, members in sorted(groups.items()):
+            if len(members) == c:
+                return members
+        return None
+
+    def pick_fresh(self, c: int, now: float) -> Optional[List[LogicalServer]]:
+        """Fragmentation-aware greedy (§V.B.4): prefer breaking already-broken
+        gangs; among intact gangs break the smallest."""
+        idle = self.idle(now)
+        if len(idle) < c:
+            return None
+        idle_ids = {s.sid for s in idle}
+
+        def intact(s: LogicalServer) -> bool:
+            if s.gang < 0:
+                return False
+            members = [t for t in self.servers
+                       if t.gang == s.gang and t.gang_size == s.gang_size]
+            return all(t.sid in idle_ids for t in members)
+
+        idle.sort(key=lambda s: (intact(s) * (100 + 10 * s.gang_size), s.sid))
+        return idle[:c]
+
+
+class ServingEngine:
+    """policy(obs, key) -> action vector in [0,1]^(2+l)."""
+
+    def __init__(self, num_servers: int, archs: List[str], *,
+                 queue_window: int = 8, s_min: int = 4, s_max: int = 32,
+                 reduced: bool = True, seed: int = 0,
+                 time_dilation: float = 0.0):
+        self.pool = ServerPool(num_servers)
+        self.archs = archs
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self.l = queue_window
+        self.s_min, self.s_max = s_min, s_max
+        self.reduced = reduced
+        self._models: Dict[str, Model] = {}
+        self._step_fns: Dict[str, Callable] = {}
+        self.key = jax.random.PRNGKey(seed)
+        self.clock = 0.0
+        # >0: simulated seconds per Table-VI unit (deterministic virtual time);
+        # 0: wall clock.
+        self.time_dilation = time_dilation
+        self._t0 = time.time()
+
+    # -- time -----------------------------------------------------------
+    def now(self) -> float:
+        if self.time_dilation:
+            return self.clock
+        return time.time() - self._t0
+
+    def _advance(self, dt: float):
+        if self.time_dilation:
+            self.clock += dt
+
+    # -- model management -------------------------------------------------
+    def _model(self, arch: str) -> Model:
+        if arch not in self._models:
+            cfg = get_config(arch)
+            self._models[arch] = build_model(cfg.reduced() if self.reduced else cfg)
+        return self._models[arch]
+
+    def _load(self, server: LogicalServer, arch: str):
+        model = self._model(arch)
+        self.key, k = jax.random.split(self.key)
+        server.params = model.init(k)           # real weight materialisation
+        server.model_name = arch
+        self.pool.load_count += 1
+
+    # -- queue ------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def observe(self) -> np.ndarray:
+        """Eq.-6 matrix from real pool state."""
+        now = self.now()
+        E = len(self.pool.servers)
+        obs = np.zeros((3, E + self.l), np.float32)
+        for i, s in enumerate(self.pool.servers):
+            obs[0, i] = 1.0 if s.busy_until <= now else 0.0
+            obs[1, i] = max(0.0, s.busy_until - now) / 60.0
+            obs[2, i] = ((self.archs.index(s.model_name) + 1) / len(self.archs)
+                         if s.model_name in self.archs else 0.0)
+        for j, r in enumerate(sorted(self.queue, key=lambda r: r.arrive_t)[: self.l]):
+            obs[0, E + j] = (now - r.arrive_t) / 60.0
+            obs[1, E + j] = r.patches / 8.0
+            obs[2, E + j] = (self.archs.index(r.arch) + 1) / len(self.archs)
+        return obs
+
+    # -- execution ---------------------------------------------------------
+    def _generate(self, req: Request, steps: int, servers: List[LogicalServer]):
+        """Real patch-parallel prefill + decode on the gang leader's params."""
+        model = self._model(req.arch)
+        cfg = model.cfg
+        params = servers[0].params
+        c = len(servers)
+        prompt = np.asarray(req.prompt, np.int32)
+        # patch-parallel prefill: split the prompt into c chunks -> batch dim
+        # (each chunk is one server's patch; merged back into a single cache)
+        pad = (-len(prompt)) % c
+        chunks = np.pad(prompt, (0, pad)).reshape(c, -1)
+        cache = model.make_cache(1, len(prompt) + pad + req.max_new_tokens,
+                                 dtype=jnp.float32)
+        batch = {"tokens": jnp.asarray(prompt[None])}
+        if cfg.frontend == "vision":
+            batch["image_embeds"] = jnp.zeros((1, cfg.frontend_tokens,
+                                               cfg.frontend_dim))
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros((1, cfg.frontend_tokens, cfg.d_model))
+        logits, cache = model.prefill(params, batch, cache,
+                                      compute_dtype=jnp.float32)
+        out = []
+        tok = jnp.argmax(logits[:, -1:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        for _ in range(steps):
+            out.append(int(tok[0, 0]))
+            logits, cache = model.decode(params, cache, tok,
+                                         compute_dtype=jnp.float32)
+            tok = jnp.argmax(logits[:, -1:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        req.tokens = np.asarray(out, np.int32)
+
+    def try_schedule(self, action: np.ndarray) -> Optional[Request]:
+        """One scheduler decision (Algorithm 1 lines 4-31)."""
+        now = self.now()
+        if action[0] > 0.5 or not self.queue:
+            self._advance(1.0)
+            return None
+        visible = sorted(self.queue, key=lambda r: r.arrive_t)[: self.l]
+        scores = action[2: 2 + len(visible)]
+        req = visible[int(np.argmax(scores))]
+        steps = int(round(self.s_min + float(np.clip(action[1], 0, 1))
+                          * (self.s_max - self.s_min)))
+        gang = self.pool.find_reusable_gang(req.arch, req.patches, now)
+        reused = gang is not None
+        if gang is None:
+            gang = self.pool.pick_fresh(req.patches, now)
+            if gang is None:
+                self._advance(1.0)
+                return None              # infeasible: not enough idle servers
+        self.queue.remove(req)
+        req.start_t = now
+        req.steps = steps
+        req.reused = reused
+        if not reused:
+            for s in gang:
+                self._load(s, req.arch)
+        else:
+            self.pool.reuse_count += 1
+            # share the already-loaded params across the gang
+            for s in gang[1:]:
+                s.params = gang[0].params
+        self._generate(req, steps, gang)
+        # account busy time with the Table-VI latency model (virtual) or
+        # wall clock (real)
+        t_model = float(TM.exec_time(jnp.asarray(req.patches), jnp.asarray(steps)))
+        t_init = 0.0 if reused else float(TM.init_time(jnp.asarray(req.patches)))
+        busy = (t_model + t_init) if self.time_dilation else (self.now() - now)
+        for s in gang:
+            s.gang = req.rid
+            s.gang_size = req.patches
+            s.busy_until = now + busy
+        self._advance(busy if self.time_dilation else 0.0)
+        req.finish_t = now + busy
+        req.quality = float(quality_of(steps))
+        self.done.append(req)
+        return req
+
+    # -- metrics ------------------------------------------------------------
+    def metrics(self) -> Dict[str, float]:
+        if not self.done:
+            return {"completed": 0}
+        resp = [r.finish_t - r.arrive_t for r in self.done]
+        return {
+            "completed": len(self.done),
+            "avg_response": float(np.mean(resp)),
+            "avg_quality": float(np.mean([r.quality for r in self.done])),
+            "reload_rate": 1.0 - self.pool.reuse_count / max(1, len(self.done)),
+            "loads": self.pool.load_count,
+            "reuses": self.pool.reuse_count,
+        }

@@ -1,0 +1,78 @@
+"""Adam + weight decay + grad clipping + schedules (no optax offline).
+
+Functional optimizer in the optax style: init(params) -> state;
+apply(grads, state, params, lr) -> (updates, state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adam_init(params) -> AdamState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     mu=jax.tree_util.tree_map(z, params),
+                     nu=jax.tree_util.tree_map(z, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adam_update(grads, state: AdamState, params, lr,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.0) -> Tuple[Any, AdamState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        u = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (-lr * u).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    outs = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    updates = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+    return updates, AdamState(step=step, mu=mu, nu=nu)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def cosine_schedule(step, base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)

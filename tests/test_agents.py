@@ -1,0 +1,136 @@
+"""EAT agent variants: encoder, diffusion policy, SAC update, PPO update."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import agent as AG
+from repro.core import diffusion as DF
+from repro.core.env import EnvConfig
+from repro.core.networks import attention_encode, init_attention_encoder
+from repro.core.sac import SACConfig, init_train_state, update_step
+
+ECFG = EnvConfig(num_servers=4, max_tasks=8, queue_window=4)
+
+
+def test_attention_encoder_shapes():
+    p = init_attention_encoder(jax.random.PRNGKey(0), 3, 8, d_attn=16)
+    s = jax.random.normal(jax.random.PRNGKey(1), (3, 8))
+    f = attention_encode(p, s)
+    assert f.shape == (8,)
+    # batched
+    sb = jax.random.normal(jax.random.PRNGKey(2), (5, 3, 8))
+    fb = attention_encode(p, sb)
+    assert fb.shape == (5, 8)
+    np.testing.assert_allclose(np.asarray(fb[0]),
+                               np.asarray(attention_encode(p, sb[0])),
+                               rtol=1e-6)
+
+
+def test_attention_softmax_rows():
+    """Eq. 9: attention weights rows sum to 1 (implicitly via softmax) —
+    verify permutation equivariance of the encoding."""
+    p = init_attention_encoder(jax.random.PRNGKey(0), 3, 6)
+    s = jax.random.normal(jax.random.PRNGKey(1), (3, 6))
+    f = attention_encode(p, s)
+    perm = jnp.asarray([1, 0, 2, 3, 4, 5])
+    f2 = attention_encode(p, s[:, perm])
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(f[perm]), rtol=1e-5, atol=1e-6)
+
+
+def test_vp_schedule():
+    sched = DF.vp_schedule(10)
+    assert sched.betas.shape == (10,)
+    assert np.all(np.asarray(sched.betas) > 0)
+    assert np.all(np.asarray(sched.betas) < 1)
+    assert float(sched.alpha_bars[-1]) < 0.05   # near-pure noise at i = T
+
+
+@pytest.mark.parametrize("variant", list(AG.VARIANTS))
+def test_actor_sample_bounds(variant):
+    acfg = AG.AgentConfig(variant=variant, T=5)
+    params = AG.init_actor(jax.random.PRNGKey(0), ECFG, acfg)
+    sched = DF.vp_schedule(acfg.T)
+    obs = jax.random.normal(jax.random.PRNGKey(1), ECFG.obs_shape)
+    a, mean, log_sigma, ent = AG.actor_sample(params, acfg, ECFG, sched, obs,
+                                              jax.random.PRNGKey(2))
+    assert a.shape == (ECFG.action_dim,)
+    assert np.all(np.abs(np.asarray(a)) <= 1.0)
+    assert np.all(np.abs(np.asarray(mean)) <= 1.0)
+    assert np.isfinite(float(ent))
+    env_a = AG.to_env_action(a)
+    assert np.all((np.asarray(env_a) >= 0) & (np.asarray(env_a) <= 1))
+
+
+def test_entropy_formula():
+    """H = 0.5 sum log(2 pi e sigma^2) (Eq. 14)."""
+    acfg = AG.AgentConfig(variant="eat-da")
+    params = AG.init_actor(jax.random.PRNGKey(0), ECFG, acfg)
+    sched = DF.vp_schedule(acfg.T)
+    obs = jax.random.normal(jax.random.PRNGKey(1), ECFG.obs_shape)
+    _, _, log_sigma, ent = AG.actor_sample(params, acfg, ECFG, sched, obs,
+                                           jax.random.PRNGKey(2))
+    expect = 0.5 * np.sum(np.log(2 * np.pi * np.e) + 2 * np.asarray(log_sigma))
+    np.testing.assert_allclose(float(ent), expect, rtol=1e-5)
+
+
+def test_diffusion_reverse_differentiable():
+    acfg = AG.AgentConfig(variant="eat", T=4)
+    params = AG.init_actor(jax.random.PRNGKey(0), ECFG, acfg)
+    sched = DF.vp_schedule(acfg.T)
+    obs = jax.random.normal(jax.random.PRNGKey(1), ECFG.obs_shape)
+
+    def f(p):
+        a, _, _, _ = AG.actor_sample(p, acfg, ECFG, sched, obs,
+                                     jax.random.PRNGKey(2))
+        return jnp.sum(a)
+
+    g = jax.grad(f)(params)
+    gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("variant", ["eat", "eat-da"])
+def test_sac_update_step(variant):
+    acfg = AG.AgentConfig(variant=variant, T=3)
+    scfg = SACConfig(batch_size=16)
+    ts = init_train_state(jax.random.PRNGKey(0), ECFG, acfg)
+    rng = np.random.default_rng(0)
+    batch = {
+        "obs": jnp.asarray(rng.normal(size=(16,) + ECFG.obs_shape), jnp.float32),
+        "action": jnp.asarray(rng.uniform(-1, 1, size=(16, ECFG.action_dim)),
+                              jnp.float32),
+        "reward": jnp.asarray(rng.normal(size=(16,)), jnp.float32),
+        "next_obs": jnp.asarray(rng.normal(size=(16,) + ECFG.obs_shape),
+                                jnp.float32),
+        "done": jnp.zeros((16,), jnp.float32),
+    }
+    ts2, m = update_step(ts, batch, jax.random.PRNGKey(1), ecfg=ECFG,
+                         acfg=acfg, scfg=scfg)
+    assert np.isfinite(float(m["critic_loss"]))
+    assert np.isfinite(float(m["actor_loss"]))
+    # target nets moved toward the online nets (soft update)
+    t0 = jax.tree_util.tree_leaves(ts.target1)[0]
+    t1 = jax.tree_util.tree_leaves(ts2.target1)[0]
+    assert not np.allclose(np.asarray(t0), np.asarray(t1))
+    assert int(ts2.step) == 1
+
+
+def test_ppo_update():
+    from repro.core.ppo import PPOConfig, init_ppo, ppo_act, ppo_update
+    st = init_ppo(jax.random.PRNGKey(0), ECFG)
+    obs = jax.random.normal(jax.random.PRNGKey(1), ECFG.obs_shape)
+    a, logp, v = ppo_act(st.params, obs, jax.random.PRNGKey(2), ecfg=ECFG)
+    assert a.shape == (ECFG.action_dim,)
+    rng = np.random.default_rng(0)
+    batch = {
+        "obs": jnp.asarray(rng.normal(size=(32,) + ECFG.obs_shape), jnp.float32),
+        "action": jnp.asarray(rng.uniform(-1, 1, size=(32, ECFG.action_dim)),
+                              jnp.float32),
+        "logp": jnp.asarray(rng.normal(size=(32,)), jnp.float32),
+        "adv": jnp.asarray(rng.normal(size=(32,)), jnp.float32),
+        "ret": jnp.asarray(rng.normal(size=(32,)), jnp.float32),
+    }
+    st2, m = ppo_update(st, batch, ecfg=ECFG, pcfg=PPOConfig())
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["grad_norm"]) >= 0

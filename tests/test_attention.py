@@ -1,0 +1,110 @@
+"""flash_attention_jnp (XLA path + custom flash backward) vs naive oracle,
+including hypothesis property sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (decode_attention, flash_attention_jnp,
+                                    simple_attention)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 24)])
+def test_forward_matches_oracle(causal, window):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], 2, 65, 8, 32)
+    k = _rand(ks[1], 2, 65, 4, 32)
+    v = _rand(ks[2], 2, 65, 4, 32)
+    o = flash_attention_jnp(q, k, v, causal=causal, window=window,
+                            q_block=16, k_block=32)
+    oref = simple_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16)])
+def test_gradient_matches_oracle(causal, window):
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], 1, 48, 4, 16)
+    k = _rand(ks[1], 1, 48, 2, 16)
+    v = _rand(ks[2], 1, 48, 2, 16)
+
+    def f(impl):
+        def g(q, k, v):
+            return jnp.sum(jnp.tanh(impl(q, k, v)))
+        return jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+
+    g1 = f(lambda q, k, v: flash_attention_jnp(
+        q, k, v, causal=causal, window=window, q_block=16, k_block=16))
+    g2 = f(lambda q, k, v: simple_attention(q, k, v, causal=causal,
+                                            window=window))
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.integers(1, 70),
+    t=st.integers(1, 70),
+    kv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 3]),
+    hd=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+)
+def test_property_shapes(s, t, kv, g, hd, causal):
+    if causal:
+        t = s  # causal masks assume aligned positions
+    key = jax.random.PRNGKey(s * 1000 + t)
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], 1, s, kv * g, hd)
+    k = _rand(ks[1], 1, t, kv, hd)
+    v = _rand(ks[2], 1, t, kv, hd)
+    o = flash_attention_jnp(q, k, v, causal=causal, q_block=16, k_block=16)
+    oref = simple_attention(q, k, v, causal=causal)
+    assert o.shape == q.shape
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_decode_matches_full():
+    """decode_attention on the last position == full attention last row."""
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 3)
+    b, t, h, kvh, hd = 2, 20, 6, 2, 16
+    q_full = _rand(ks[0], b, t, h, hd)
+    k = _rand(ks[1], b, t, kvh, hd)
+    v = _rand(ks[2], b, t, kvh, hd)
+    full = simple_attention(q_full, k, v, causal=True)
+    dec = decode_attention(q_full[:, -1:], k, v, t)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_ring_window():
+    """Ring cache with window w must equal plain windowed decode."""
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 3)
+    b, kvh, hd, w = 1, 2, 8, 8
+    t_total = 13  # cache has seen 13 tokens, ring size 8
+    q = _rand(ks[0], b, 1, 4, hd)
+    k_all = _rand(ks[1], b, t_total, kvh, hd)
+    v_all = _rand(ks[2], b, t_total, kvh, hd)
+    # plain windowed: last w entries
+    ref = decode_attention(q, k_all, v_all, t_total, window=w)
+    # ring layout: entry i lives at i % w
+    ring_k = jnp.zeros((b, w, kvh, hd))
+    ring_v = jnp.zeros((b, w, kvh, hd))
+    for i in range(t_total):
+        ring_k = ring_k.at[:, i % w].set(k_all[:, i])
+        ring_v = ring_v.at[:, i % w].set(v_all[:, i])
+    out = decode_attention(q, ring_k, ring_v, t_total, window=w, ring=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

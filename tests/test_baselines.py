@@ -1,0 +1,80 @@
+"""Baseline schedulers: greedy, random, meta-heuristics, sequence rollouts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as BL
+from repro.core.env import EnvConfig, episode_metrics, reset, step
+from repro.core.workload import TraceConfig, make_trace, paper_rate_for
+
+ECFG = EnvConfig(num_servers=4, max_tasks=8, queue_window=4, max_steps=256)
+TC = TraceConfig(num_tasks=8, arrival_rate=0.05, max_servers=4)
+
+
+def _trace(seed=0):
+    return make_trace(jax.random.PRNGKey(seed), TC)
+
+
+def test_paper_rates():
+    assert paper_rate_for(4) == 0.05
+    assert paper_rate_for(8) == 0.1
+    assert paper_rate_for(12) == 0.15
+
+
+def test_trace_properties():
+    trace = _trace()
+    arr = np.asarray(trace["arr_time"])
+    assert np.all(np.diff(arr) > 0)                  # strictly increasing
+    assert set(np.asarray(trace["c"])) <= {1, 2, 4}  # clipped to 4 servers
+
+
+def test_greedy_prefers_quality():
+    """Greedy maximises immediate reward -> near-max steps (paper §VI.B.3)."""
+    trace = _trace()
+    m = BL.evaluate_policy(
+        ECFG, trace, lambda k, s, o: BL.greedy_act(ECFG, trace, s),
+        jax.random.PRNGKey(0))
+    assert m["num_scheduled"] == 8
+    assert m["avg_steps"] > 0.8 * ECFG.s_max
+
+
+def test_greedy_beats_random_return():
+    trace = _trace(3)
+    rng_key = jax.random.PRNGKey(0)
+    g = BL.evaluate_policy(ECFG, trace,
+                           lambda k, s, o: BL.greedy_act(ECFG, trace, s),
+                           rng_key)
+    r = BL.evaluate_policy(ECFG, trace,
+                           lambda k, s, o: BL.random_policy(k, ECFG), rng_key)
+    assert g["episode_return"] >= r["episode_return"]
+
+
+def test_rollout_sequence_deterministic():
+    trace = _trace()
+    seq = jax.random.uniform(jax.random.PRNGKey(1), (64, ECFG.action_dim))
+    r1, s1 = BL.rollout_sequence(ECFG, trace, seq)
+    r2, s2 = BL.rollout_sequence(ECFG, trace, seq)
+    assert float(r1) == float(r2)
+    np.testing.assert_array_equal(np.asarray(s1.task_status),
+                                  np.asarray(s2.task_status))
+
+
+def test_genetic_improves_fitness():
+    trace = _trace()
+    gcfg = BL.GeneticConfig(population=8, generations=3, parents=3, seq_len=48)
+    key = jax.random.PRNGKey(0)
+    # initial random population fitness
+    pop0 = jax.random.uniform(key, (8, 48, ECFG.action_dim))
+    fits0 = jax.vmap(lambda s: BL.rollout_sequence(ECFG, trace, s)[0])(pop0)
+    _, best = BL.genetic_schedule(key, ECFG, trace, gcfg)
+    assert float(best) >= float(jnp.max(fits0)) - 1e-5
+
+
+def test_harmony_returns_valid_sequence():
+    trace = _trace()
+    hcfg = BL.HarmonyConfig(memory_size=6, improvisations=4, seq_len=32)
+    seq, fit = BL.harmony_schedule(jax.random.PRNGKey(0), ECFG, trace, hcfg)
+    assert seq.shape == (32, ECFG.action_dim)
+    assert np.all((np.asarray(seq) >= 0) & (np.asarray(seq) <= 1))
+    assert np.isfinite(float(fit))

@@ -1,0 +1,89 @@
+"""The 10 assigned architecture configs must match the assignment table exactly."""
+import pytest
+
+from repro.common.config import ASSIGNED_ARCHS, get_config, list_configs
+
+# (layers, d_model, heads, kv, d_ff, vocab, family)
+EXPECTED = {
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536, "hybrid"),
+    "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000, "dense"),
+    "whisper-small": (12, 768, 12, 12, 3072, 51865, "audio"),
+    "gemma-7b": (28, 3072, 16, 16, 24576, 256000, "dense"),
+    "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304, "moe"),
+    "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256, "dense"),
+    "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936, "dense"),
+    "internvl2-1b": (24, 896, 14, 2, 4864, 151655, "vlm"),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936, "moe"),
+    "xlstm-125m": (12, 768, 4, 4, 0, 50304, "ssm"),
+}
+
+MOE_SPECS = {
+    "jamba-v0.1-52b": (16, 2),
+    "olmoe-1b-7b": (64, 8),
+    "qwen3-moe-30b-a3b": (128, 8),
+}
+
+
+def test_all_assigned_registered():
+    known = set(list_configs())
+    assert set(ASSIGNED_ARCHS) <= known
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_exact_dims(name):
+    cfg = get_config(name)
+    layers, d, h, kv, ff, vocab, fam = EXPECTED[name]
+    assert cfg.num_layers == layers
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == vocab
+    assert cfg.family == fam
+    assert cfg.source  # every config cites its source
+
+
+@pytest.mark.parametrize("name", sorted(MOE_SPECS))
+def test_moe_specs(name):
+    cfg = get_config(name)
+    e, k = MOE_SPECS[name]
+    assert cfg.moe is not None
+    assert cfg.moe.num_experts == e
+    assert cfg.moe.experts_per_token == k
+
+
+def test_special_attributes():
+    assert get_config("gemma-7b").head_dim == 256
+    assert get_config("gemma-7b").activation == "geglu"
+    assert get_config("qwen2-1.5b").qkv_bias
+    assert get_config("whisper-small").encoder_layers == 12
+    assert get_config("jamba-v0.1-52b").attn_period == 8
+    assert get_config("internvl2-1b").frontend == "vision"
+    assert get_config("xlstm-125m").layer_pattern == "xlstm"
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_padded_vocab_shardable(name):
+    cfg = get_config(name)
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+    assert cfg.d_model % 16 == 0  # shards on the 16-way axes
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_reduced_variant_bounds(name):
+    r = get_config(name).reduced()
+    assert r.d_model <= 512
+    assert r.num_layers <= 8
+    if r.moe is not None:
+        assert r.moe.num_experts <= 4
+
+
+def test_param_counts_plausible():
+    # sanity: headline sizes within 2x of the public numbers
+    assert 30e9 < get_config("jamba-v0.1-52b").param_count() < 80e9
+    assert 0.6e9 < get_config("tinyllama-1.1b").param_count() < 1.6e9
+    assert 5e9 < get_config("gemma-7b").param_count() < 12e9
+    assert 4e9 < get_config("olmoe-1b-7b").param_count() < 9e9
+    active = get_config("olmoe-1b-7b").param_count(active_only=True)
+    assert active < 2.5e9  # ~1B active

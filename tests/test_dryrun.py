@@ -1,0 +1,81 @@
+"""Dry-run machinery: input_specs, pair skip rules, and one real
+lower+compile on the production mesh (slow; subprocess for device count)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.common.config import ASSIGNED_ARCHS, get_config
+from repro.launch.shapes import SHAPES, adapt_config, pair_list
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_pair_skips():
+    pairs = pair_list()
+    # whisper long_500k is the single skipped pair (DESIGN.md §4)
+    assert ("whisper-small", "long_500k") not in pairs
+    assert len(pairs) == 39
+
+
+def test_long500k_dense_gets_window():
+    cfg = adapt_config(get_config("llama3.2-3b"), SHAPES["long_500k"])
+    assert cfg.sliding_window == 16384
+    # subquadratic archs keep native attention
+    cfg2 = adapt_config(get_config("jamba-v0.1-52b"), SHAPES["long_500k"])
+    assert cfg2.sliding_window == 0
+
+
+def test_input_specs_structs():
+    from repro.launch.steps import input_specs
+    cfg = get_config("internvl2-1b")
+    sp = input_specs(cfg, SHAPES["train_4k"])
+    assert sp["tokens"].shape == (256, 4096)
+    assert sp["image_embeds"].shape == (256, 256, 896)
+    spd = input_specs(cfg, SHAPES["decode_32k"])
+    assert spd["token"].shape == (128, 1)
+
+
+@pytest.mark.slow
+def test_dryrun_one_case_subprocess():
+    """Real 512-device lower+compile via the CLI (proves the entry point)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "xlstm-125m", "--shape", "decode_32k", "--mesh", "multi",
+         "--out", "/tmp/dryrun_test"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."), timeout=500)
+    assert "1 ok" in out.stdout, out.stdout[-2000:] + out.stderr[-2000:]
+    rec = json.load(open("/tmp/dryrun_test/xlstm-125m__decode_32k__multi.json"))
+    assert rec["status"] == "ok"
+    assert rec["devices"] == 512
+    assert rec["hlo_flops"] > 0
+
+
+def test_hlo_collective_parser():
+    from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+    hlo = """
+      %ar = f32[256,4096]{1,0} all-reduce(%x), replica_groups={}
+      %ag.1 = bf16[16,128]{1,0} all-gather(%y), dimensions={0}
+      %aa = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(%a, %b)
+    """
+    cb = collective_bytes(hlo)
+    assert cb["all-reduce"] == 256 * 4096 * 4
+    assert cb["all-gather"] == 16 * 128 * 2
+    assert cb["all-to-all"] == 2 * 8 * 8 * 4
+    assert cb["ops"] == 3
+    terms = roofline_terms({"flops": 197e12, "bytes accessed": 819e9}, cb)
+    assert terms["compute_s"] == pytest.approx(1.0)
+    assert terms["memory_s"] == pytest.approx(1.0)
+    assert terms["bottleneck"] in ("compute", "memory", "collective")

@@ -1,0 +1,174 @@
+"""Environment invariants: unit + hypothesis property tests on the MDP."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import timemodel as TM
+from repro.core.env import EnvConfig, observe, reset, step, episode_metrics
+from repro.core.quality import quality_of
+from repro.core.workload import TraceConfig, make_trace
+
+ECFG = EnvConfig(num_servers=4, max_tasks=12, queue_window=4)
+TC = TraceConfig(num_tasks=12, arrival_rate=0.05, max_servers=4)
+
+
+def _trace(seed=0):
+    return make_trace(jax.random.PRNGKey(seed), TC)
+
+
+def _rollout(actions, trace, ecfg=ECFG):
+    """Apply a fixed list of actions; returns trajectory of (state, info)."""
+    state = reset(ecfg)
+    traj = []
+    for a in actions:
+        state, obs, r, done, info = step(ecfg, trace, state, jnp.asarray(a))
+        traj.append((state, float(r), bool(done), info))
+        if done:
+            break
+    return traj
+
+
+def test_observation_shape_and_ranges():
+    trace = _trace()
+    state = reset(ECFG)
+    obs = observe(ECFG, trace, state)
+    assert obs.shape == ECFG.obs_shape
+    assert np.all(np.asarray(obs[0, : ECFG.num_servers]) == 1.0)  # all idle
+
+
+def test_eq6_layout():
+    """Row semantics of the Eq.-6 matrix."""
+    trace = _trace()
+    state = reset(ECFG)
+    # advance time past first arrival
+    state = state._replace(time=trace["arr_time"][0] + 1.0)
+    obs = np.asarray(observe(ECFG, trace, state))
+    E = ECFG.num_servers
+    assert obs[0, E] > 0          # waiting time of the first task
+    assert obs[1, E] == float(trace["c"][0]) / 8.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_gang_invariants(seed):
+    """For random policies: gang members idle at schedule time, steps in
+    bounds, tasks scheduled at most once, conservation of tasks."""
+    trace = _trace(seed % 50)
+    rng = np.random.default_rng(seed)
+    state = reset(ECFG)
+    scheduled_ids = []
+    for _ in range(80):
+        t_before = float(state.time)
+        free_before = np.asarray(state.server_free_at)
+        a = rng.uniform(size=ECFG.action_dim).astype(np.float32)
+        state, obs, r, done, info = step(ECFG, trace, state, jnp.asarray(a))
+        if bool(info["scheduled"]):
+            k = int(info["task"])
+            assert k not in scheduled_ids          # at most once
+            scheduled_ids.append(k)
+            s = int(info["steps"])
+            assert ECFG.s_min <= s <= ECFG.s_max   # step bounds
+            # gang servers were idle before scheduling
+            c_k = int(trace["c"][k])
+            changed = np.where(np.asarray(state.server_free_at) != free_before)[0]
+            assert len(changed) == c_k
+            assert np.all(free_before[changed] <= t_before + 1e-5)
+        if bool(done):
+            break
+    st_ = np.asarray(state.task_status)
+    assert np.sum(st_ >= 1) == len(scheduled_ids)   # conservation
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_reuse_skips_init(seed):
+    """finish - start == exec_time (+init iff reload)."""
+    trace = _trace(seed % 20)
+    rng = np.random.default_rng(seed)
+    state = reset(ECFG)
+    for _ in range(80):
+        a = rng.uniform(size=ECFG.action_dim).astype(np.float32)
+        state, _, _, done, info = step(ECFG, trace, state, jnp.asarray(a))
+        if bool(info["scheduled"]):
+            k = int(info["task"])
+            c = np.asarray(trace["c"])[k]
+            s = int(np.asarray(state.task_steps)[k])
+            dur = float(np.asarray(state.task_finish)[k]
+                        - np.asarray(state.task_start)[k])
+            exec_t = float(TM.exec_time(jnp.asarray(c), jnp.asarray(s)))
+            init_t = float(TM.init_time(jnp.asarray(c)))
+            if int(np.asarray(state.task_reload)[k]):
+                np.testing.assert_allclose(dur, exec_t + init_t, rtol=1e-5)
+            else:
+                np.testing.assert_allclose(dur, exec_t, rtol=1e-5)
+        if bool(done):
+            break
+
+
+def test_noop_advances_time():
+    trace = _trace()
+    state = reset(ECFG)
+    noop = jnp.asarray([1.0, 0.5] + [0.0] * ECFG.queue_window)
+    state2, _, r, _, info = step(ECFG, trace, state, noop)
+    assert not bool(info["scheduled"])
+    assert float(r) == 0.0
+    assert float(state2.time) > float(state.time)
+
+
+def test_schedule_keeps_time():
+    trace = _trace()
+    state = reset(ECFG)
+    # advance until a task is queued
+    noop = jnp.asarray([1.0, 0.5] + [0.0] * ECFG.queue_window)
+    for _ in range(10):
+        state, _, _, _, _ = step(ECFG, trace, state, noop)
+        if float(state.time) >= float(trace["arr_time"][0]):
+            break
+    t = float(state.time)
+    act = jnp.asarray([0.0, 0.5, 1.0] + [0.0] * (ECFG.queue_window - 1))
+    state2, _, r, _, info = step(ECFG, trace, state, act)
+    if bool(info["scheduled"]):
+        assert float(state2.time) == t   # scheduling does not advance time
+        assert float(r) > 0
+
+
+def test_infeasible_when_servers_busy():
+    """c_k larger than idle count -> no schedule."""
+    ecfg = EnvConfig(num_servers=2, max_tasks=4, queue_window=4)
+    tc = TraceConfig(num_tasks=4, arrival_rate=1.0, max_servers=2,
+                     c_support=(2,), c_probs=(1.0,))
+    trace = make_trace(jax.random.PRNGKey(0), tc)
+    state = reset(ecfg)
+    noop = jnp.asarray([1.0, 0.5, 0, 0, 0, 0], jnp.float32)
+    act = jnp.asarray([0.0, 0.5, 1.0, 0, 0, 0], jnp.float32)
+    for _ in range(6):
+        state, _, _, _, _ = step(ecfg, trace, state, noop)
+    state, _, _, _, i1 = step(ecfg, trace, state, act)
+    assert bool(i1["scheduled"])            # 2 idle -> ok
+    state, _, _, _, i2 = step(ecfg, trace, state, act)
+    assert not bool(i2["scheduled"])        # all busy now
+
+
+def test_reward_structure():
+    """Reward = alpha*q - lambda*I + reciprocal time term (bounded)."""
+    trace = _trace()
+    state = reset(ECFG)
+    noop = jnp.asarray([1.0, 0.5] + [0.0] * ECFG.queue_window)
+    while float(state.time) < float(trace["arr_time"][0]):
+        state, _, _, _, _ = step(ECFG, trace, state, noop)
+    act = jnp.asarray([0.0, 1.0, 1.0] + [0.0] * (ECFG.queue_window - 1))
+    _, _, r, _, info = step(ECFG, trace, state, act)
+    assert bool(info["scheduled"])
+    q = float(info["quality"])
+    assert q == pytest.approx(float(quality_of(50)), abs=0.02)
+    assert 0 < float(r) < ECFG.alpha_q * 0.3 + 10
+
+
+def test_metrics_keys():
+    trace = _trace()
+    state = reset(ECFG)
+    m = episode_metrics(ECFG, trace, state)
+    for k in ("avg_quality", "avg_response", "reload_rate", "avg_steps"):
+        assert k in m

@@ -1,0 +1,31 @@
+"""Integration: short EAT training run completes and schedules all tasks."""
+import jax
+import pytest
+
+from repro.core.agent import AgentConfig
+from repro.core.env import EnvConfig
+from repro.core.sac import SACConfig, train
+from repro.core.workload import TraceConfig, make_trace
+
+
+@pytest.mark.slow
+def test_eat_short_training_run():
+    ecfg = EnvConfig(num_servers=4, max_tasks=6, queue_window=4, max_steps=128)
+    tc = TraceConfig(num_tasks=6, arrival_rate=0.05, max_servers=4)
+    ts, hist = train(ecfg, AgentConfig(variant="eat", T=4),
+                     SACConfig(batch_size=32, warmup_steps=32,
+                               updates_per_step=1),
+                     lambda k: make_trace(k, tc), num_episodes=2, log_every=0)
+    assert len(hist) == 2
+    assert all(h["num_scheduled"] >= 1 for h in hist)
+    assert int(ts.step) > 0
+
+
+@pytest.mark.slow
+def test_eat_da_short_training_run():
+    ecfg = EnvConfig(num_servers=4, max_tasks=6, queue_window=4, max_steps=128)
+    tc = TraceConfig(num_tasks=6, arrival_rate=0.05, max_servers=4)
+    ts, hist = train(ecfg, AgentConfig(variant="eat-da"),
+                     SACConfig(batch_size=32, warmup_steps=32),
+                     lambda k: make_trace(k, tc), num_episodes=2, log_every=0)
+    assert len(hist) == 2

@@ -1,0 +1,81 @@
+"""End-to-end serving engine: real model execution, gang allocation, reuse."""
+import numpy as np
+import pytest
+
+from repro.serving.engine import Request, ServingEngine
+
+
+def _req(rid, arch="tinyllama-1.1b", c=2, t=0.0, prompt_len=8):
+    rng = np.random.default_rng(rid)
+    return Request(rid=rid, arch=arch, prompt=rng.integers(0, 1000, prompt_len),
+                   patches=c, arrive_t=t, max_new_tokens=4)
+
+
+def _random_policy(engine, rng):
+    a = rng.uniform(size=2 + engine.l).astype(np.float32)
+    a[0] = 0.0  # always try to execute in tests
+    return a
+
+
+def test_engine_serves_requests():
+    eng = ServingEngine(num_servers=2, archs=["tinyllama-1.1b"], queue_window=4,
+                        reduced=True, time_dilation=1.0, s_min=2, s_max=4)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        eng.submit(_req(i, c=2))
+    for _ in range(12):
+        if not eng.queue:
+            break
+        eng.try_schedule(_random_policy(eng, rng))
+    m = eng.metrics()
+    assert m["completed"] == 3
+    assert all(r.tokens is not None and len(r.tokens) == r.steps
+               for r in eng.done)
+    assert m["avg_quality"] > 0
+
+
+def test_engine_model_reuse():
+    """Same service, same gang size -> second task reuses the loaded model."""
+    eng = ServingEngine(num_servers=2, archs=["tinyllama-1.1b"], queue_window=4,
+                        reduced=True, time_dilation=1.0, s_min=2, s_max=2)
+    rng = np.random.default_rng(0)
+    eng.submit(_req(0, c=2))
+    r0 = eng.try_schedule(_random_policy(eng, rng))
+    assert r0 is not None and not r0.reused
+    # wait for the gang to go idle
+    eng.clock = max(s.busy_until for s in eng.pool.servers) + 1
+    eng.submit(_req(1, c=2, t=eng.clock))
+    r1 = eng.try_schedule(_random_policy(eng, rng))
+    assert r1 is not None and r1.reused
+    assert eng.pool.load_count == 2      # only the first gang loaded
+    assert eng.metrics()["reload_rate"] == 0.5
+
+
+def test_engine_gang_infeasible():
+    eng = ServingEngine(num_servers=2, archs=["tinyllama-1.1b"], queue_window=4,
+                        reduced=True, time_dilation=1.0)
+    rng = np.random.default_rng(0)
+    eng.submit(Request(rid=0, arch="tinyllama-1.1b",
+                       prompt=np.arange(8), patches=4, arrive_t=0.0))
+    out = eng.try_schedule(_random_policy(eng, rng))
+    assert out is None                    # 4 patches > 2 servers
+    assert len(eng.queue) == 1
+
+
+def test_engine_observation_matches_eq6():
+    eng = ServingEngine(num_servers=3, archs=["tinyllama-1.1b", "qwen2-1.5b"],
+                        queue_window=2, reduced=True, time_dilation=1.0)
+    eng.submit(_req(0, c=1))
+    obs = eng.observe()
+    assert obs.shape == (3, 3 + 2)
+    assert np.all(obs[0, :3] == 1.0)      # all idle
+    assert obs[1, 3] == pytest.approx(1 / 8)   # c_k row
+
+
+def test_latency_table_scales():
+    from repro.serving.latency_table import arch_scales, env_model_scales
+    s = arch_scales()
+    assert s["jamba-v0.1-52b"] > s["tinyllama-1.1b"]
+    scales = env_model_scales()
+    assert len(scales) == 10
+    assert all(0.25 <= x <= 8.0 for x in scales)

@@ -1,0 +1,52 @@
+"""Latency model vs the paper's Table VI; quality proxy vs Tables II/IX."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import timemodel as TM
+from repro.core.quality import quality_of, quality_penalty
+
+
+def test_table_vi_values():
+    np.testing.assert_allclose(float(TM.init_time(jnp.asarray(1))), 33.5)
+    np.testing.assert_allclose(float(TM.init_time(jnp.asarray(2))), 31.9)
+    np.testing.assert_allclose(float(TM.init_time(jnp.asarray(4))), 35.0)
+    np.testing.assert_allclose(
+        float(TM.exec_time(jnp.asarray(1), jnp.asarray(20))), 0.53 * 20)
+    np.testing.assert_allclose(
+        float(TM.exec_time(jnp.asarray(2), jnp.asarray(20))), 0.29 * 20)
+    np.testing.assert_allclose(
+        float(TM.exec_time(jnp.asarray(4), jnp.asarray(17))), 0.20 * 17,
+        rtol=1e-6)
+
+
+def test_patch_acceleration_monotonic():
+    """Table I: more patches -> faster per-step time."""
+    ts = [float(TM.exec_time(jnp.asarray(c), jnp.asarray(20)))
+          for c in (1, 2, 4, 8)]
+    assert ts == sorted(ts, reverse=True)
+    accel = ts[0] / np.asarray(ts)
+    assert accel[1] == pytest.approx(1.8, rel=0.05)   # paper: x1.8
+    assert accel[2] == pytest.approx(3.1, rel=0.2)    # paper: x3.1 (2.65 in VI)
+    assert accel[3] == pytest.approx(4.9, rel=0.25)   # paper: x4.9
+
+
+def test_quality_calibration():
+    """Anchors: ~0.24 at 17-18 steps, ~0.25 at 20, saturating ~0.27-0.285."""
+    assert float(quality_of(18)) == pytest.approx(0.24, abs=0.015)
+    assert float(quality_of(20)) == pytest.approx(0.251, abs=0.01)
+    assert float(quality_of(50)) == pytest.approx(0.283, abs=0.01)
+    assert float(quality_of(10)) < float(quality_of(20)) < float(quality_of(40))
+
+
+def test_quality_penalty():
+    assert float(quality_penalty(0.20, 0.23, 2.0)) == 2.0
+    assert float(quality_penalty(0.25, 0.23, 2.0)) == 0.0
+
+
+def test_predict_remaining():
+    with_init = float(TM.predict_remaining(jnp.asarray(2), jnp.asarray(10),
+                                           jnp.asarray(False)))
+    without = float(TM.predict_remaining(jnp.asarray(2), jnp.asarray(10),
+                                         jnp.asarray(True)))
+    assert with_init == pytest.approx(without + 31.9)
