@@ -1,0 +1,13 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test test-all bench-rollout
+
+test:            ## tier-1: fast suite (slow tests deselected by default)
+	$(PY) -m pytest -x -q
+
+test-all:        ## full suite including slow trainings
+	$(PY) -m pytest -q -m ""
+
+bench-rollout:   ## batched-rollout engine vs host-loop evaluator
+	$(PY) benchmarks/bench_batch_rollout.py

@@ -21,22 +21,17 @@ from repro.core import agent as AG
 from repro.core import baselines as BL
 from repro.core import env as EV
 from repro.core import ppo as PPO
+from repro.core import rollout as RO
 from repro.core import sac as SAC
-from repro.core.workload import TraceConfig, make_trace, paper_rate_for
+from repro.core.scenarios import PAPER_RATE_GRID as PAPER_GRID
+from repro.core.workload import (TraceConfig, make_trace, paper_rate_for,
+                                 stack_traces)
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 SCHED_DIR = os.path.join(ART, "scheduling")
 
 DRL_ALGOS = ("eat", "eat-a", "eat-d", "eat-da", "ppo")
 ALL_ALGOS = DRL_ALGOS + ("greedy", "random", "genetic", "harmony")
-
-# paper cluster configs: servers -> arrival-rate sweep (Tables IX-XI)
-PAPER_GRID = {
-    4: (0.01, 0.03, 0.05, 0.07, 0.09),
-    8: (0.06, 0.08, 0.10, 0.12, 0.14),
-    12: (0.11, 0.13, 0.15, 0.17, 0.19),
-}
-
 
 def make_env_cfg(num_servers: int) -> EV.EnvConfig:
     return EV.EnvConfig(num_servers=num_servers, queue_window=8,
@@ -66,8 +61,8 @@ _TRAINED: Dict = {}
 
 def train_drl(algo: str, num_servers: int, episodes: int, seed: int = 0,
               log_every: int = 0):
-    """Train a DRL variant at the paper's per-cluster rate. Returns an
-    act(key, state, obs)->env-action callable."""
+    """Train a DRL variant at the paper's per-cluster rate. Returns
+    (rollout policy, policy params, history) for the batched evaluator."""
     cache_key = (algo, num_servers, episodes, seed)
     if cache_key in _TRAINED:
         return _TRAINED[cache_key]
@@ -77,53 +72,43 @@ def train_drl(algo: str, num_servers: int, episodes: int, seed: int = 0,
     if algo == "ppo":
         st, hist = PPO.train_ppo(ecfg, PPO.PPOConfig(), tfn, episodes,
                                  seed=seed, log_every=log_every)
-
-        def act(key, state, obs, _st=st, _ecfg=ecfg):
-            a, _, _ = PPO.ppo_act(_st.params, obs, key, ecfg=_ecfg)
-            return AG.to_env_action(a)
+        policy, params = PPO.ppo_policy(ecfg), st.params
     else:
         acfg = AG.AgentConfig(variant=algo)
         scfg = SAC.SACConfig(batch_size=128, warmup_steps=192, update_every=2)
         ts, hist = SAC.train(ecfg, acfg, scfg, tfn, episodes, seed=seed,
                              log_every=log_every)
-
-        def act(key, state, obs, _ts=ts, _ecfg=ecfg, _acfg=acfg):
-            a = SAC.policy_act(_ts.actor, obs, key, ecfg=_ecfg, acfg=_acfg,
-                               deterministic=True)
-            return AG.to_env_action(a)
-    _TRAINED[cache_key] = (act, hist)
-    return act, hist
+        policy, params = SAC.actor_policy(ecfg, acfg, deterministic=True), \
+            ts.actor
+    _TRAINED[cache_key] = (policy, params, hist)
+    return policy, params, hist
 
 
 # ----------------------------------------------------------------------
 def evaluate_algo(algo: str, num_servers: int, rate: float, *,
                   episodes: int, n_eval: int = 5, seed: int = 0) -> Dict:
-    """Average episode metrics for one algorithm at one (servers, rate)."""
+    """Average episode metrics for one algorithm at one (servers, rate).
+    Policy algorithms evaluate all n_eval traces in one jitted batched
+    rollout (bit-compatible with the old per-trace host loop)."""
     ecfg = make_env_cfg(num_servers)
     traces = eval_traces(num_servers, rate, n_eval)
+    batched = stack_traces(traces)
+    keys = jnp.stack([jax.random.PRNGKey(777 + i) for i in range(n_eval)])
     per_ep: List[Dict] = []
 
-    if algo in ("eat", "eat-a", "eat-d", "eat-da", "ppo"):
-        act, _ = train_drl(algo, num_servers, episodes, seed=seed)
-        for i, tr in enumerate(traces):
-            m = BL.evaluate_policy(
-                ecfg, tr, lambda k, s, o: act(k, s, o),
-                jax.random.PRNGKey(777 + i))
-            per_ep.append(m)
-    elif algo == "random":
-        for i, tr in enumerate(traces):
-            m = BL.evaluate_policy(
-                ecfg, tr,
-                lambda k, s, o: BL.random_policy(k, ecfg),
-                jax.random.PRNGKey(777 + i))
-            per_ep.append(m)
-    elif algo == "greedy":
-        for i, tr in enumerate(traces):
-            m = BL.evaluate_policy(
-                ecfg, tr,
-                lambda k, s, o, _tr=tr: BL.greedy_act(ecfg, _tr, s),
-                jax.random.PRNGKey(777 + i))
-            per_ep.append(m)
+    if algo in ("eat", "eat-a", "eat-d", "eat-da", "ppo", "random", "greedy"):
+        params = {}
+        if algo == "random":
+            policy = RO.uniform_policy(ecfg)
+        elif algo == "greedy":
+            policy = RO.greedy_policy(ecfg)
+        else:
+            policy, params, _ = train_drl(algo, num_servers, episodes,
+                                          seed=seed)
+        m = BL.evaluate_policy_batch(ecfg, batched, policy, keys,
+                                     params=params)
+        per_ep = [{k: float(v[i]) for k, v in m.items()}
+                  for i in range(n_eval)]
     elif algo in ("genetic", "harmony"):
         # meta-heuristics optimise a fixed sequence on a *training* trace
         # (no run-time feedback, as the paper describes), then replay it on
@@ -138,11 +123,13 @@ def evaluate_algo(algo: str, num_servers: int, rate: float, *,
                                     memory_size=32)
             seq, _ = BL.harmony_schedule(jax.random.PRNGKey(seed), ecfg,
                                          opt_trace, hcfg)
-        for tr in traces:
-            ret, fstate = BL.rollout_sequence(ecfg, tr, seq)
-            m = {k: float(v)
-                 for k, v in EV.episode_metrics(ecfg, tr, fstate).items()}
-            m.update(episode_return=float(ret), episode_len=len(seq))
+        rets, fstates = jax.vmap(
+            lambda tr: BL.rollout_sequence(ecfg, tr, seq))(batched)
+        ms = jax.vmap(
+            lambda tr, s: EV.episode_metrics(ecfg, tr, s))(batched, fstates)
+        for i in range(n_eval):
+            m = {k: float(v[i]) for k, v in ms.items()}
+            m.update(episode_return=float(rets[i]), episode_len=len(seq))
             per_ep.append(m)
     else:
         raise ValueError(f"unknown algo {algo!r}")

@@ -4,9 +4,12 @@
         --servers 8 --variants eat,eat-da,ppo
 
 Trains each variant on the 8-server simulated cluster at the paper's
-arrival rate and dumps reward / episode-length curves to
+arrival rate (experience collected from ``--num-envs`` parallel envs via the
+batched rollout engine), dumps reward / episode-length curves to
 ``artifacts/training_curves.json`` (paper Fig. 5a/5c: EAT trends above the
-ablations; Fig. 5b: diffusion-policy variants converge to shorter episodes).
+ablations; Fig. 5b: diffusion-policy variants converge to shorter episodes),
+then evaluates every trained policy — plus Random/Greedy — on ``--eval-batch``
+held-out traces in one jitted program per policy.
 """
 from __future__ import annotations
 
@@ -14,11 +17,17 @@ import argparse
 import json
 import os
 
+import jax
+import numpy as np
+
 from repro.core import agent as AG
+from repro.core import baselines as BL
 from repro.core import ppo as PPO
+from repro.core import rollout as RO
 from repro.core import sac as SAC
 from repro.core.env import EnvConfig
-from repro.core.workload import TraceConfig, make_trace, paper_rate_for
+from repro.core.workload import (TraceConfig, make_trace, make_trace_batch,
+                                 paper_rate_for)
 
 
 def main():
@@ -27,6 +36,8 @@ def main():
     ap.add_argument("--servers", type=int, default=8)
     ap.add_argument("--variants", default="eat,eat-a,eat-d,eat-da,ppo")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--num-envs", type=int, default=4)
+    ap.add_argument("--eval-batch", type=int, default=16)
     ap.add_argument("--out", default="artifacts/training_curves.json")
     args = ap.parse_args()
 
@@ -36,20 +47,44 @@ def main():
     trace_fn = lambda key: make_trace(key, tc)  # noqa: E731
 
     curves = {}
+    eval_policies = {"random": (RO.uniform_policy(ecfg), {}),
+                     "greedy": (RO.greedy_policy(ecfg), {})}
     for variant in args.variants.split(","):
         print(f"=== training {variant} ({args.episodes} episodes, "
-              f"{args.servers} servers, rate {rate}) ===")
+              f"{args.servers} servers, rate {rate}, "
+              f"{args.num_envs} parallel envs) ===")
         if variant == "ppo":
-            _, hist = PPO.train_ppo(ecfg, PPO.PPOConfig(), trace_fn,
-                                    args.episodes, seed=args.seed,
-                                    log_every=5)
+            st, hist = PPO.train_ppo(ecfg, PPO.PPOConfig(), trace_fn,
+                                     args.episodes, seed=args.seed,
+                                     log_every=5, num_envs=args.num_envs)
+            eval_policies[variant] = (PPO.ppo_policy(ecfg), st.params)
         else:
             acfg = AG.AgentConfig(variant=variant)
             scfg = SAC.SACConfig(batch_size=128, warmup_steps=192,
                                  update_every=2)
-            _, hist = SAC.train(ecfg, acfg, scfg, trace_fn, args.episodes,
-                                seed=args.seed, log_every=5)
+            ts, hist = SAC.train(ecfg, acfg, scfg, trace_fn, args.episodes,
+                                 seed=args.seed, log_every=5,
+                                 num_envs=args.num_envs)
+            eval_policies[variant] = (
+                SAC.actor_policy(ecfg, acfg, deterministic=True), ts.actor)
         curves[variant] = hist
+
+    # -- held-out evaluation: one jitted batched rollout per policy --------
+    print(f"\n=== batched evaluation ({args.eval_batch} held-out traces) ===")
+    eval_traces = make_trace_batch(jax.random.PRNGKey(10_000), tc,
+                                   args.eval_batch)
+    eval_keys = jax.random.split(jax.random.PRNGKey(777), args.eval_batch)
+    evaluation = {}
+    for name, (policy, params) in eval_policies.items():
+        m = BL.evaluate_policy_batch(ecfg, eval_traces, policy, eval_keys,
+                                     params=params)
+        evaluation[name] = {k: float(np.mean(v)) for k, v in m.items()}
+    print(f"{'policy':8s} {'return':>8s} {'quality':>8s} {'resp':>8s} "
+          f"{'reload':>7s}")
+    for name, m in evaluation.items():
+        print(f"{name:8s} {m['episode_return']:8.1f} {m['avg_quality']:8.3f} "
+              f"{m['avg_response']:8.1f} {m['reload_rate']:7.2f}")
+    curves = {"curves": curves, "evaluation": evaluation}
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
@@ -58,7 +93,7 @@ def main():
     print(f"\ncurves -> {args.out}")
     print(f"{'variant':8s} {'first-3 R':>10s} {'last-3 R':>10s} "
           f"{'last-3 len':>10s} {'resp':>8s}")
-    for v, hist in curves.items():
+    for v, hist in curves["curves"].items():
         f3 = sum(h["episode_return"] for h in hist[:3]) / min(3, len(hist))
         l3 = sum(h["episode_return"] for h in hist[-3:]) / min(3, len(hist))
         ln = sum(h["episode_len"] for h in hist[-3:]) / min(3, len(hist))

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify: fast test suite (slow-marked trainings are deselected by
+# pyproject.toml). Extra pytest args pass through, e.g. scripts/test.sh -m "".
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

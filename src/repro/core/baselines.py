@@ -19,6 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import env as EV
+from repro.core import quality as Q
+from repro.core import rollout as RO
 
 
 # ----------------------------------------------------------------------
@@ -43,12 +45,29 @@ def _candidate_actions(ecfg: EV.EnvConfig, n_steps: int = 9) -> jnp.ndarray:
 
 @functools.partial(jax.jit, static_argnames=("ecfg",))
 def greedy_act(ecfg: EV.EnvConfig, trace: Dict, state: EV.EnvState):
+    """Quality-first candidate search (paper §VI.B.3).
+
+    The paper's Greedy maximises immediate quality — it lands on near-max
+    inference steps at the cost of response time. Scoring candidates by the
+    raw env reward does NOT reproduce that: the reciprocal-time term shrinks
+    with every extra inference step, dragging the argmax to interior step
+    counts (~30 instead of ~s_max). So the quality component of the reward
+    (alpha_q q - lambda_q I) is the primary criterion and the full reward
+    only breaks ties between equal-quality candidates (earlier task, less
+    queue wait).
+    """
     cands = _candidate_actions(ecfg)
+
     def eval_a(a):
         _, _, r, _, info = EV.step(ecfg, trace, state, a)
-        return r + jnp.where(info["scheduled"], 1e-6, 0.0)
-    rewards = jax.vmap(eval_a)(cands)
-    return cands[jnp.argmax(rewards)]
+        q = info["quality"]
+        pen = Q.quality_penalty(q, ecfg.q_min, ecfg.p_quality)
+        qual = jnp.where(info["scheduled"],
+                         ecfg.alpha_q * q - ecfg.lambda_q * pen + 1e-6, 0.0)
+        return 1e3 * qual + r
+
+    scores = jax.vmap(eval_a)(cands)
+    return cands[jnp.argmax(scores)]
 
 
 # ----------------------------------------------------------------------
@@ -162,14 +181,31 @@ def evaluate_policy(ecfg: EV.EnvConfig, trace: Dict, act_fn, key,
     step_jit = jax.jit(lambda s, a: EV.step(ecfg, trace, s, a))
     state = EV.reset(ecfg)
     obs = EV.observe(ecfg, trace, state)
-    total, done, n = 0.0, False, 0
+    # f32 accumulation so the return matches batch_rollout's scan bitwise
+    total, done, n = np.float32(0.0), False, 0
     while not done and n < max_steps:
         key, ka = jax.random.split(key)
         a = act_fn(ka, state, obs)
         state, obs, r, d, _ = step_jit(state, a)
-        total += float(r)
+        total = total + np.float32(r)
         done = bool(d)
         n += 1
     m = {k: float(v) for k, v in EV.episode_metrics(ecfg, trace, state).items()}
-    m.update(episode_return=total, episode_len=n)
+    m.update(episode_return=float(total), episode_len=n)
     return m
+
+
+def evaluate_policy_batch(ecfg: EV.EnvConfig, traces: Dict, policy, keys,
+                          params=None, num_steps: int = None) -> Dict:
+    """Batched evaluation: B traces in one jitted program.
+
+    `traces` carries a leading (B,) axis (``stack_traces`` /
+    ``workload.make_trace_batch``); `policy` follows the rollout protocol —
+    use ``rollout.uniform_policy(ecfg)`` / ``rollout.greedy_policy(ecfg)``
+    for the non-learned baselines. Returns episode metrics as (B,) numpy
+    arrays; row b is bitwise what ``evaluate_policy`` returns on
+    (traces[b], keys[b]).
+    """
+    res = RO.batch_rollout(ecfg, traces, policy, {} if params is None else params,
+                           keys, num_steps=num_steps)
+    return {k: np.asarray(v) for k, v in res.metrics.items()}

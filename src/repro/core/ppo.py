@@ -16,7 +16,9 @@ import numpy as np
 
 from repro.core import agent as AG
 from repro.core import env as EV
+from repro.core import rollout as RO
 from repro.core.networks import init_mlp, mlp_apply
+from repro.core.workload import stack_traces
 from repro.models.layers import mish
 from repro.training.optimizer import (AdamState, adam_init, adam_update,
                                       apply_updates, clip_by_global_norm)
@@ -78,6 +80,19 @@ def ppo_act(params, obs, key, *, ecfg: EV.EnvConfig):
     return a, _logp(mean, log_sigma, a), value_of(params, obs)
 
 
+@functools.lru_cache(maxsize=None)
+def ppo_policy(ecfg: EV.EnvConfig):
+    """Gaussian-MLP actor as a batch_rollout policy (logp/value in extras)."""
+    def policy(params, key, trace, state, obs):
+        mean, log_sigma = _dist(params, obs)
+        a = mean + jnp.exp(log_sigma) * jax.random.normal(key, mean.shape)
+        a = jnp.clip(a, -1.0, 1.0)
+        return AG.to_env_action(a), {"agent_action": a,
+                                     "logp": _logp(mean, log_sigma, a),
+                                     "value": value_of(params, obs)}
+    return policy
+
+
 def compute_gae(rewards, values, dones, last_value, gamma, lam):
     """numpy GAE over a rollout."""
     T = len(rewards)
@@ -118,43 +133,44 @@ def ppo_update(st: PPOState, batch: Dict, *, ecfg: EV.EnvConfig, pcfg: PPOConfig
 
 
 def train_ppo(ecfg: EV.EnvConfig, pcfg: PPOConfig, trace_fn, num_episodes: int,
-              seed: int = 0, log_every: int = 10):
+              seed: int = 0, log_every: int = 10, num_envs: int = 4):
+    """On-policy training on top of the batched rollout engine: each
+    iteration collects `num_envs` full episodes in one jitted program, then
+    runs clipped-surrogate epochs over the pooled (valid) transitions with
+    per-episode GAE."""
     key = jax.random.PRNGKey(seed)
     key, k0 = jax.random.split(key)
     st = init_ppo(k0, ecfg)
     history = []
-    step_jit = jax.jit(lambda s, a, tr: EV.step(ecfg, tr, s, a))
     rng = np.random.default_rng(seed)
 
-    for ep in range(num_episodes):
+    ep = 0
+    while ep < num_episodes:
+        B = min(num_envs, num_episodes - ep)
         key, kt, ke = jax.random.split(key, 3)
-        trace = trace_fn(kt)
-        state = EV.reset(ecfg)
-        obs = EV.observe(ecfg, trace, state)
-        traj = {k: [] for k in ("obs", "action", "logp", "reward", "done", "value")}
-        done, total_r, nsteps = False, 0.0, 0
-        while not done:
-            ke, ka = jax.random.split(ke)
-            a, logp, v = ppo_act(st.params, obs, ka, ecfg=ecfg)
-            state, next_obs, r, done_arr, _ = step_jit(state, AG.to_env_action(a), trace)
-            done = bool(done_arr)
-            for k_, v_ in zip(("obs", "action", "logp", "reward", "done", "value"),
-                              (np.asarray(obs), np.asarray(a), float(logp),
-                               float(r), float(done), float(v))):
-                traj[k_].append(v_)
-            obs = next_obs
-            total_r += float(r)
-            nsteps += 1
-        # -- GAE + updates
-        rewards = np.asarray(traj["reward"], np.float32)
-        values = np.asarray(traj["value"], np.float32)
-        dones = np.asarray(traj["done"], np.float32)
-        adv, ret = compute_gae(rewards, values, dones, 0.0, pcfg.gamma,
-                               pcfg.gae_lambda)
-        data = {"obs": np.stack(traj["obs"]), "action": np.stack(traj["action"]),
-                "logp": np.asarray(traj["logp"], np.float32),
-                "adv": adv, "ret": ret}
-        n = len(rewards)
+        traces = stack_traces([trace_fn(k) for k in jax.random.split(kt, B)])
+        keys = jax.random.split(ke, B)
+        res = RO.batch_rollout(ecfg, traces, ppo_policy(ecfg), st.params,
+                               keys, collect=True)
+        tr = res.transitions
+        valid = np.asarray(tr.valid)
+        lens = valid.sum(axis=1)
+        # -- per-episode GAE over the valid prefix, pooled into one batch
+        chunks = {k: [] for k in ("obs", "action", "logp", "adv", "ret")}
+        for b in range(B):
+            L = int(lens[b])
+            adv, ret = compute_gae(np.asarray(tr.reward[b, :L]),
+                                   np.asarray(tr.extras["value"][b, :L]),
+                                   np.asarray(tr.done[b, :L]), 0.0,
+                                   pcfg.gamma, pcfg.gae_lambda)
+            chunks["obs"].append(np.asarray(tr.obs[b, :L]))
+            chunks["action"].append(np.asarray(tr.extras["agent_action"][b, :L]))
+            chunks["logp"].append(np.asarray(tr.extras["logp"][b, :L]))
+            chunks["adv"].append(adv)
+            chunks["ret"].append(ret)
+        data = {k: np.concatenate(v).astype(np.float32)
+                for k, v in chunks.items()}
+        n = len(data["adv"])
         for _ in range(pcfg.epochs):
             perm = rng.permutation(n)
             mb = max(1, n // pcfg.minibatches)
@@ -162,10 +178,14 @@ def train_ppo(ecfg: EV.EnvConfig, pcfg: PPOConfig, trace_fn, num_episodes: int,
                 idx = perm[i:i + mb]
                 batch = {k: jnp.asarray(v[idx]) for k, v in data.items()}
                 st, m = ppo_update(st, batch, ecfg=ecfg, pcfg=pcfg)
-        em = {k: float(v) for k, v in EV.episode_metrics(ecfg, trace, state).items()}
-        em.update(episode=ep, episode_return=total_r, episode_len=nsteps)
-        history.append(em)
-        if log_every and ep % log_every == 0:
-            print(f"[ppo ep {ep:4d}] R={total_r:8.2f} len={nsteps:4d} "
-                  f"resp={em['avg_response']:7.2f} q={em['avg_quality']:.3f}")
+        for b in range(B):
+            em = {k: float(v[b]) for k, v in res.metrics.items()}
+            em.update(episode=ep, episode_len=int(lens[b]))
+            history.append(em)
+            if log_every and ep % log_every == 0:
+                print(f"[ppo ep {ep:4d}] R={em['episode_return']:8.2f} "
+                      f"len={em['episode_len']:4d} "
+                      f"resp={em['avg_response']:7.2f} "
+                      f"q={em['avg_quality']:.3f}")
+            ep += 1
     return st, history

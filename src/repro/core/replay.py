@@ -28,8 +28,18 @@ class ReplayBuffer:
         self.size = min(self.size + 1, self.capacity)
 
     def add_batch(self, obs, action, reward, next_obs, done):
-        for j in range(len(reward)):
-            self.add(obs[j], action[j], reward[j], next_obs[j], done[j])
+        """Vectorized ring insertion of n transitions (one numpy scatter)."""
+        n = len(reward)
+        if n == 0:
+            return
+        idx = (self.ptr + np.arange(n)) % self.capacity
+        self.obs[idx] = obs
+        self.action[idx] = action
+        self.reward[idx] = reward
+        self.next_obs[idx] = next_obs
+        self.done[idx] = np.asarray(done, np.float32)
+        self.ptr = int((self.ptr + n) % self.capacity)
+        self.size = int(min(self.size + n, self.capacity))
 
     def sample(self, rng: np.random.Generator, batch: int) -> Dict[str, np.ndarray]:
         idx = rng.integers(0, self.size, size=batch)

@@ -1,0 +1,132 @@
+"""Device-resident batched rollout engine (fully jitted, vmapped episodes).
+
+The env (`env.py`) is fixed-shape and jittable; this module exploits that to
+run B episodes at once: `lax.scan` over decision steps inside, `vmap` over a
+batch axis of (trace, PRNG key) pairs outside, one XLA program total. Every
+consumer that previously stepped the env from a host Python loop (baseline
+evaluation, SAC experience collection, PPO trajectory collection, scenario
+sweeps) sits on top of `batch_rollout`.
+
+Policy protocol
+---------------
+    policy(params, key, trace, state, obs) -> (env_action in [0,1]^A, extras)
+
+`params` is an arbitrary pytree threaded through jit (NOT baked into the
+compiled program — actor weights can change between calls without
+recompiling); `extras` is a (possibly empty) dict of per-step auxiliary
+outputs (e.g. raw agent-space actions, log-probs, values) that comes back
+stacked in `Transitions.extras`. The policy callable itself is a static jit
+argument: build it once (the factories here cache on `EnvConfig`) and reuse
+it, or every call recompiles.
+
+Parity with the host loop: the scan splits the carried key exactly like the
+host-side evaluators (`key, k_act = split(key)` per decision step) and
+freezes the state once `done`, so a batched episode reproduces the host-loop
+episode bit-for-bit on the same (trace, policy, key).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import env as EV
+
+Policy = Callable[..., Any]
+
+
+class Transitions(NamedTuple):
+    """Stacked per-step records; leading axes (T,) or (B, T) when batched."""
+    obs: jnp.ndarray        # (..., 3, E+l) observation before the action
+    action: jnp.ndarray     # (..., A) env-space action in [0, 1]
+    reward: jnp.ndarray     # (...,) f32, 0 after episode end
+    next_obs: jnp.ndarray   # (..., 3, E+l)
+    done: jnp.ndarray       # (...,) f32 done flag after this step
+    valid: jnp.ndarray      # (...,) bool, step executed before episode end
+    extras: Dict[str, jnp.ndarray]
+
+
+class RolloutResult(NamedTuple):
+    metrics: Dict[str, jnp.ndarray]   # episode_metrics + return + length
+    final_state: EV.EnvState
+    transitions: Optional[Transitions]
+
+
+# ----------------------------------------------------------------------
+def rollout_episode(ecfg: EV.EnvConfig, trace: Dict, policy: Policy, params,
+                    key, *, num_steps: Optional[int] = None,
+                    collect: bool = False) -> RolloutResult:
+    """One episode as a lax.scan (traceable; jit/vmap at the call site)."""
+    T = int(num_steps) if num_steps else ecfg.max_steps
+    state0 = EV.reset(ecfg)
+    obs0 = EV.observe(ecfg, trace, state0)
+
+    def body(carry, _):
+        state, obs, k, done, total, length = carry
+        k, k_act = jax.random.split(k)
+        action, extras = policy(params, k_act, trace, state, obs)
+        nstate, nobs, r, d, _ = EV.step(ecfg, trace, state, action)
+        # freeze the episode once done so trailing scan steps are no-ops
+        nstate = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(done, o, n), nstate, state)
+        nobs = jnp.where(done, obs, nobs)
+        r = jnp.where(done, 0.0, r)
+        valid = ~done
+        out = (Transitions(obs=obs, action=action, reward=r, next_obs=nobs,
+                           done=d.astype(jnp.float32), valid=valid,
+                           extras=extras)
+               if collect else None)
+        carry = (nstate, nobs, k, done | d, total + r,
+                 length + valid.astype(jnp.int32))
+        return carry, out
+
+    carry0 = (state0, obs0, key, jnp.zeros((), bool),
+              jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32))
+    (state, _, _, _, total, length), traj = jax.lax.scan(
+        body, carry0, None, length=T)
+    metrics = dict(EV.episode_metrics(ecfg, trace, state))
+    metrics["episode_return"] = total
+    metrics["episode_len"] = length
+    return RolloutResult(metrics=metrics, final_state=state,
+                         transitions=traj if collect else None)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ecfg", "policy", "num_steps", "collect"))
+def batch_rollout(ecfg: EV.EnvConfig, traces: Dict, policy: Policy, params,
+                  keys, *, num_steps: Optional[int] = None,
+                  collect: bool = False) -> RolloutResult:
+    """B episodes in one jitted program.
+
+    `traces`: trace dict with a leading (B,) batch axis (see
+    `workload.make_trace_batch` / `workload.stack_traces`); `keys`: (B, 2)
+    PRNG keys. `params` is broadcast (shared policy weights). Returns a
+    `RolloutResult` whose leaves all carry the (B, ...) batch axis.
+    """
+    def one(trace, key):
+        return rollout_episode(ecfg, trace, policy, params, key,
+                               num_steps=num_steps, collect=collect)
+
+    return jax.vmap(one)(traces, keys)
+
+
+# ----------------------------------------------------------------------
+# cached policy factories (the callable must stay identical across calls —
+# it is a static jit argument of batch_rollout)
+@functools.lru_cache(maxsize=None)
+def uniform_policy(ecfg: EV.EnvConfig) -> Policy:
+    """Random baseline: uniform env-space action (paper §VI.A.3 Random)."""
+    def policy(params, key, trace, state, obs):
+        return jax.random.uniform(key, (ecfg.action_dim,)), {}
+    return policy
+
+
+@functools.lru_cache(maxsize=None)
+def greedy_policy(ecfg: EV.EnvConfig) -> Policy:
+    """Greedy baseline: immediate quality-first candidate search."""
+    from repro.core import baselines as BL
+    def policy(params, key, trace, state, obs):
+        return BL.greedy_act(ecfg, trace, state), {}
+    return policy

@@ -18,7 +18,9 @@ import numpy as np
 from repro.core import agent as AG
 from repro.core import diffusion as DF
 from repro.core import env as EV
+from repro.core import rollout as RO
 from repro.core.replay import ReplayBuffer
+from repro.core.workload import stack_traces
 from repro.training.optimizer import AdamState, adam_init, adam_update, apply_updates
 
 
@@ -131,6 +133,48 @@ def policy_act(actor_params, obs, key, *, ecfg: EV.EnvConfig,
     return a
 
 
+# ----------------------------------------------------------------------
+# rollout-engine policies (cached: the callable is a static jit argument)
+@functools.lru_cache(maxsize=None)
+def actor_policy(ecfg: EV.EnvConfig, acfg: AG.AgentConfig,
+                 deterministic: bool = False):
+    """Diffusion/Gaussian actor as a batch_rollout policy; actor weights are
+    the traced `params`, so training updates never trigger a recompile."""
+    sched = DF.vp_schedule(acfg.T)
+
+    def policy(params, key, trace, state, obs):
+        a, _, _, _ = AG.actor_sample(params, acfg, ecfg, sched, obs, key,
+                                     deterministic=deterministic)
+        return AG.to_env_action(a), {"agent_action": a}
+    return policy
+
+
+@functools.lru_cache(maxsize=None)
+def warmup_policy(ecfg: EV.EnvConfig):
+    """Uniform agent-space exploration used until the buffer warms up."""
+    def policy(params, key, trace, state, obs):
+        a = jax.random.uniform(key, (ecfg.action_dim,), minval=-1.0,
+                               maxval=1.0)
+        return AG.to_env_action(a), {"agent_action": a}
+    return policy
+
+
+def collect_batch(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, actor_params,
+                  traces, keys, buffer: ReplayBuffer, *,
+                  warmup: bool = False) -> Tuple[Dict, int]:
+    """Roll out B parallel episodes and push the valid transitions into the
+    replay buffer (agent-space actions). Returns (stacked metrics, n added)."""
+    policy = warmup_policy(ecfg) if warmup else actor_policy(ecfg, acfg)
+    params = {} if warmup else actor_params
+    res = RO.batch_rollout(ecfg, traces, policy, params, keys, collect=True)
+    tr = res.transitions
+    valid = np.asarray(tr.valid).reshape(-1)
+    flat = lambda x: np.asarray(x).reshape((-1,) + x.shape[2:])[valid]  # noqa: E731
+    buffer.add_batch(flat(tr.obs), flat(tr.extras["agent_action"]),
+                     flat(tr.reward), flat(tr.next_obs), flat(tr.done))
+    return res.metrics, int(valid.sum())
+
+
 def run_episode(ecfg: EV.EnvConfig, trace, actor_params, acfg: AG.AgentConfig,
                 key, buffer: ReplayBuffer = None, deterministic: bool = False,
                 step_fn=None):
@@ -191,8 +235,14 @@ def seed_with_demonstrations(buffer: ReplayBuffer, ecfg: EV.EnvConfig,
 
 def train(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, scfg: SACConfig,
           trace_fn, num_episodes: int, seed: int = 0, log_every: int = 10,
-          callback=None, demo_episodes: int = 0):
+          callback=None, demo_episodes: int = 0, num_envs: int = 4):
     """Full training loop (Algorithm 2). trace_fn(key) -> trace dict.
+
+    Experience comes from the batched rollout engine: each iteration rolls
+    out `num_envs` parallel envs (fresh traces) in one jitted program, pushes
+    every transition into the buffer, then runs the same number of gradient
+    updates the per-step schedule would have done
+    (updates_per_step * new_steps / update_every).
     demo_episodes > 0 seeds the buffer with Greedy demonstrations."""
     key = jax.random.PRNGKey(seed)
     rng = np.random.default_rng(seed)
@@ -205,49 +255,34 @@ def train(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, scfg: SACConfig,
         if log_every:
             print(f"[demo] seeded buffer with {n} greedy transitions")
     history = []
-    step_cache = {}
 
-    for ep in range(num_episodes):
+    ep = 0
+    while ep < num_episodes:
+        B = min(num_envs, num_episodes - ep)
         key, kt, ke = jax.random.split(key, 3)
-        trace = trace_fn(kt)
-        step_fn_t = step_cache.setdefault(
-            "step", jax.jit(lambda s, a, tr: EV.step(ecfg, tr, s, a)))
-        step_fn = lambda s, a: step_fn_t(s, a, trace)  # noqa: E731
-        # -- rollout
-        state = EV.reset(ecfg)
-        obs = EV.observe(ecfg, trace, state)
-        total_r, nsteps, done = 0.0, 0, False
-        while not done:
-            ke, ka = jax.random.split(ke)
-            if buffer.size < scfg.warmup_steps:
-                a = np.asarray(jax.random.uniform(ka, (ecfg.action_dim,),
-                                                  minval=-1.0, maxval=1.0))
-            else:
-                a = policy_act(ts.actor, obs, ka, ecfg=ecfg, acfg=acfg)
-            state, next_obs, r, done_arr, _ = step_fn(state, AG.to_env_action(
-                jnp.asarray(a)))
-            done = bool(done_arr)
-            buffer.add(np.asarray(obs), np.asarray(a), float(r),
-                       np.asarray(next_obs), done)
-            total_r += float(r)
-            obs = next_obs
-            nsteps += 1
-            # -- updates
-            if buffer.size >= scfg.warmup_steps \
-                    and nsteps % scfg.update_every == 0:
-                for _ in range(scfg.updates_per_step):
-                    key, ku = jax.random.split(key)
-                    batch = {k: jnp.asarray(v) for k, v in
-                             buffer.sample(rng, scfg.batch_size).items()}
-                    ts, m = update_step(ts, batch, ku, ecfg=ecfg, acfg=acfg,
-                                        scfg=scfg)
-        em = {k: float(v) for k, v in EV.episode_metrics(ecfg, trace, state).items()}
-        em.update(episode=ep, episode_return=total_r, episode_len=nsteps)
-        history.append(em)
-        if callback:
-            callback(ep, em, ts)
-        if log_every and ep % log_every == 0:
-            print(f"[ep {ep:4d}] R={total_r:8.2f} len={nsteps:4d} "
-                  f"resp={em['avg_response']:7.2f} q={em['avg_quality']:.3f} "
-                  f"reload={em['reload_rate']:.2f}")
+        traces = stack_traces([trace_fn(k) for k in jax.random.split(kt, B)])
+        keys = jax.random.split(ke, B)
+        warmup = buffer.size < scfg.warmup_steps
+        metrics, n_new = collect_batch(ecfg, acfg, ts.actor, traces, keys,
+                                       buffer, warmup=warmup)
+        # -- updates (same update/env-step ratio as the per-step schedule)
+        if buffer.size >= scfg.warmup_steps:
+            for _ in range((n_new // scfg.update_every) * scfg.updates_per_step):
+                key, ku = jax.random.split(key)
+                batch = {k: jnp.asarray(v) for k, v in
+                         buffer.sample(rng, scfg.batch_size).items()}
+                ts, m = update_step(ts, batch, ku, ecfg=ecfg, acfg=acfg,
+                                    scfg=scfg)
+        for b in range(B):
+            em = {k: float(v[b]) for k, v in metrics.items()}
+            em.update(episode=ep, episode_len=int(metrics["episode_len"][b]))
+            history.append(em)
+            if callback:
+                callback(ep, em, ts)
+            if log_every and ep % log_every == 0:
+                print(f"[ep {ep:4d}] R={em['episode_return']:8.2f} "
+                      f"len={em['episode_len']:4d} "
+                      f"resp={em['avg_response']:7.2f} q={em['avg_quality']:.3f} "
+                      f"reload={em['reload_rate']:.2f}")
+            ep += 1
     return ts, history

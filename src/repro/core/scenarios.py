@@ -1,0 +1,121 @@
+"""Scenario grids for large-scale batched evaluation sweeps.
+
+The paper's headline tables (IX–XI) sweep cluster size {4, 8, 12} and
+arrival rate; related work (arXiv 2405.08328, 2412.18212) adds multi-task /
+multi-rate grids. A `Scenario` bundles the (EnvConfig, TraceConfig) pair for
+one cell; `run_scenario` evaluates B traces of that cell in one jitted
+program via the batched rollout engine, and `run_grid` sweeps a whole list.
+
+`EnvConfig` is a static (shape-determining) jit argument, so scenarios batch
+over traces/seeds *within* a cell and iterate cells on the host — each
+distinct cluster size compiles once and is reused for every rate/trace.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import env as EV
+from repro.core import rollout as RO
+from repro.core.workload import TraceConfig, make_trace_batch, paper_rate_for
+
+# paper cluster configs: servers -> arrival-rate sweep (Tables IX-XI)
+PAPER_RATE_GRID = {
+    4: (0.01, 0.03, 0.05, 0.07, 0.09),
+    8: (0.06, 0.08, 0.10, 0.12, 0.14),
+    12: (0.11, 0.13, 0.15, 0.17, 0.19),
+}
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    ecfg: EV.EnvConfig
+    tcfg: TraceConfig
+
+
+def _make(name: str, num_servers: int, rate: float, *, num_tasks: int = 32,
+          num_models: int = 1, model_scale: Tuple[float, ...] = (),
+          c_support: Tuple[int, ...] = (1, 2, 4, 8),
+          c_probs: Tuple[float, ...] = (0.35, 0.35, 0.2, 0.1)) -> Scenario:
+    ecfg = EV.EnvConfig(num_servers=num_servers, max_tasks=num_tasks,
+                        num_models=num_models, model_scale=model_scale)
+    tcfg = TraceConfig(num_tasks=num_tasks, arrival_rate=rate,
+                       max_servers=num_servers, num_models=num_models,
+                       c_support=c_support, c_probs=c_probs)
+    return Scenario(name=name, ecfg=ecfg, tcfg=tcfg)
+
+
+# ----------------------------------------------------------------------
+def paper_scenarios() -> List[Scenario]:
+    """The three paper clusters at their §VI.A.2 arrival rates."""
+    return [_make(f"paper-{e}srv", e, paper_rate_for(e)) for e in (4, 8, 12)]
+
+
+def arrival_sweep(num_servers: int = 8,
+                  rates: Optional[Sequence[float]] = None) -> List[Scenario]:
+    """One cluster size across the paper's rate sweep (Tables IX-XI cols)."""
+    rates = tuple(rates) if rates is not None else PAPER_RATE_GRID[num_servers]
+    return [_make(f"rate-{num_servers}srv-{r:.2f}", num_servers, r)
+            for r in rates]
+
+
+def multi_model_mix(num_servers: int = 8, num_models: int = 3,
+                    model_scale: Tuple[float, ...] = (1.0, 0.6, 1.4)) -> Scenario:
+    """Heterogeneous AIGC services with distinct per-step costs
+    (multi-task edge serving, arXiv 2405.08328)."""
+    return _make(f"multimodel-{num_models}x{num_servers}srv", num_servers,
+                 paper_rate_for(num_servers), num_models=num_models,
+                 model_scale=model_scale[:num_models])
+
+
+def cold_start_heavy(num_servers: int = 8) -> Scenario:
+    """Gang-size distribution skewed to large gangs: reuse is rare, so the
+    scheduler pays the ~30 s model (re)init often — stresses reload_rate."""
+    return _make(f"coldstart-{num_servers}srv", num_servers,
+                 paper_rate_for(num_servers),
+                 c_probs=(0.05, 0.15, 0.35, 0.45))
+
+
+def default_grid() -> List[Scenario]:
+    return (paper_scenarios() + arrival_sweep(8)
+            + [multi_model_mix(), cold_start_heavy()])
+
+
+# ----------------------------------------------------------------------
+def run_scenario(scenario: Scenario, policy, key, *, batch: int = 32,
+                 params=None, num_steps: Optional[int] = None) -> Dict:
+    """B fresh traces of one scenario through one jitted batched rollout.
+    Returns per-episode (B,) arrays plus scalar mean_* summaries."""
+    k_trace, k_run = jax.random.split(key)
+    traces = make_trace_batch(k_trace, scenario.tcfg, batch)
+    keys = jax.random.split(k_run, batch)
+    res = RO.batch_rollout(scenario.ecfg, traces, policy,
+                           {} if params is None else params, keys,
+                           num_steps=num_steps)
+    out: Dict = {k: np.asarray(v) for k, v in res.metrics.items()}
+    out.update({f"mean_{k}": float(np.mean(v)) for k, v in out.items()})
+    out["scenario"] = scenario.name
+    out["batch"] = batch
+    return out
+
+
+def run_grid(scenarios: Sequence[Scenario], policy_fn, key, *,
+             batch: int = 32, params=None, verbose: bool = False) -> List[Dict]:
+    """Sweep a scenario list. `policy_fn(ecfg)` -> rollout policy (e.g.
+    `rollout.uniform_policy` / `rollout.greedy_policy`), so each cluster
+    shape gets its own (cached) policy closure."""
+    results = []
+    for sc in scenarios:
+        key, k = jax.random.split(key)
+        m = run_scenario(sc, policy_fn(sc.ecfg), k, batch=batch, params=params)
+        results.append(m)
+        if verbose:
+            print(f"[{sc.name:24s}] q={m['mean_avg_quality']:.3f} "
+                  f"resp={m['mean_avg_response']:7.1f} "
+                  f"reload={m['mean_reload_rate']:.3f} "
+                  f"R={m['mean_episode_return']:7.1f}", flush=True)
+    return results

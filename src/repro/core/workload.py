@@ -44,6 +44,17 @@ def make_trace(key, tc: TraceConfig):
             "model": model.astype(jnp.int32), "noise": noise.astype(jnp.float32)}
 
 
+def make_trace_batch(key, tc: TraceConfig, batch: int):
+    """Batch of traces as one dict of (B, K) arrays (for batch_rollout)."""
+    keys = jax.random.split(key, batch)
+    return jax.vmap(lambda k: make_trace(k, tc))(keys)
+
+
+def stack_traces(traces):
+    """Stack a list of trace dicts along a new leading batch axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *traces)
+
+
 def paper_rate_for(num_servers: int) -> float:
     """Arrival rates used in the paper's experiments (§VI.A.2)."""
     return {4: 0.05, 8: 0.1, 12: 0.15}.get(num_servers, 0.0125 * num_servers)

@@ -65,7 +65,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, **case_kw):
         rec["useful_flop_ratio"] = (mf / n_dev) / per_dev if per_dev else 0.0
         rec["status"] = "ok"
         print(compiled.memory_analysis())
-        ca = compiled.cost_analysis()
+        ca = HA.cost_dict(compiled)
         print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
     except Exception as e:  # noqa: BLE001 — record and continue the sweep
         rec["status"] = "error"
