@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-all bench-rollout
+.PHONY: test test-all bench-rollout bench-traffic traffic-sweep
 
 test:            ## tier-1: fast suite (slow tests deselected by default)
 	$(PY) -m pytest -x -q
@@ -11,3 +11,9 @@ test-all:        ## full suite including slow trainings
 
 bench-rollout:   ## batched-rollout engine vs host-loop evaluator
 	$(PY) benchmarks/bench_batch_rollout.py
+
+bench-traffic:   ## streaming traffic engine throughput -> BENCH_traffic.json
+	$(PY) benchmarks/bench_traffic.py
+
+traffic-sweep:   ## >=100k-task streaming QoS sweep per policy
+	$(PY) examples/traffic_sweep.py

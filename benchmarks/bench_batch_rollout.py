@@ -74,6 +74,7 @@ def bench(args):
         "max_steps": args.max_steps,
         "host_eps_per_s": args.batch / host_s,
         "batch_eps_per_s": args.batch / batch_s,
+        "batch_tasks_per_s": args.batch * args.tasks / batch_s,
         "batch_compile_s": compile_s,
         "speedup": host_s / batch_s,
     }
@@ -81,6 +82,10 @@ def bench(args):
     print(f"\n{args.policy}: host {out['host_eps_per_s']:8.2f} eps/s | "
           f"batched {out['batch_eps_per_s']:8.2f} eps/s | "
           f"speedup x{out['speedup']:.1f} (compile {compile_s:.1f}s)")
+    if args.json_out != "none":
+        from common import write_bench_json
+        write_bench_json(f"batch_rollout_{args.policy}", out,
+                         out=args.json_out or None)
     return out
 
 
@@ -92,4 +97,7 @@ if __name__ == "__main__":
     ap.add_argument("--max-steps", type=int, default=256)
     ap.add_argument("--policy", choices=("random", "greedy"), default="random")
     ap.add_argument("--repeat", type=int, default=3)
+    ap.add_argument("--json-out", default="",
+                    help="BENCH json path ('' = repo-root default, "
+                         "'none' = skip)")
     bench(ap.parse_args())

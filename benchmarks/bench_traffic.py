@@ -1,0 +1,97 @@
+"""Streaming traffic engine throughput (wall-clock tasks/sec + sim QoS).
+
+    PYTHONPATH=src python benchmarks/bench_traffic.py --streams 32 \
+        --window-tasks 64 --windows 20
+
+Streams one window-chained run per policy through `traffic.run_stream`
+(ProcessTaskSource + Poisson at the paper rate) and records wall-clock
+tasks/sec, per-window latency, and the simulated p50/p95/p99 / QoS numbers.
+Writes BENCH_traffic.json at the repo root so the perf trajectory is
+tracked across PRs (`make bench-traffic`).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from common import write_bench_json
+from repro.core import env as EV
+from repro.core.workload import TraceConfig, paper_rate_for
+from repro.traffic.arrivals import PoissonArrivals
+from repro.traffic.policies import make_policy
+from repro.traffic.stream import ProcessTaskSource, StreamConfig, run_stream
+
+
+def bench_policy(name: str, ecfg, tcfg, scfg, *, warm_windows: int = 2):
+    policy, params = make_policy(name, ecfg)
+    proc = PoissonArrivals(tcfg.arrival_rate)
+
+    def one(num_windows, key_seed):
+        src = ProcessTaskSource(proc, tcfg, jax.random.PRNGKey(key_seed),
+                                num_streams=scfg.num_streams)
+        cfg = dataclasses.replace(scfg, num_windows=num_windows)
+        t0 = time.perf_counter()
+        res = run_stream(ecfg, policy, params, src, jax.random.PRNGKey(1), cfg)
+        return time.perf_counter() - t0, res
+
+    warm_s, _ = one(warm_windows, 0)              # compile + warm windows
+    wall_s, res = one(scfg.num_windows, 0)
+    s = res.summary
+    tasks = s["tasks_injected"]
+    return {
+        "policy": name,
+        "tasks": tasks,
+        "wall_s": wall_s,
+        "warm_s": warm_s,
+        "tasks_per_s": tasks / wall_s,
+        "windows_per_s": scfg.num_windows / wall_s,
+        "latency_p50": s["latency_p50"],
+        "latency_p99": s["latency_p99"],
+        "qos_violation_rate": s["qos_violation_rate"],
+        "utilization": s["utilization"],
+        "goodput_per_s": s["goodput_per_s"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--servers", type=int, default=8)
+    ap.add_argument("--streams", type=int, default=32)
+    ap.add_argument("--window-tasks", type=int, default=64)
+    ap.add_argument("--windows", type=int, default=20)
+    ap.add_argument("--policies", default="random,fifo,greedy")
+    ap.add_argument("--json-out", default="",
+                    help="BENCH json path ('' = repo-root default, "
+                         "'none' = skip)")
+    args = ap.parse_args()
+
+    ecfg = EV.EnvConfig(num_servers=args.servers, max_tasks=args.window_tasks)
+    tcfg = TraceConfig(num_tasks=args.window_tasks,
+                       arrival_rate=paper_rate_for(args.servers),
+                       max_servers=args.servers)
+    scfg = StreamConfig(num_windows=args.windows, num_streams=args.streams)
+
+    rows = []
+    for name in args.policies.split(","):
+        row = bench_policy(name, ecfg, tcfg, scfg)
+        rows.append(row)
+        print(f"{name:>8s}: {row['tasks']:7d} tasks in {row['wall_s']:6.1f}s "
+              f"= {row['tasks_per_s']:8.0f} tasks/s | "
+              f"p99 {row['latency_p99']:8.1f}s "
+              f"viol {row['qos_violation_rate']:.3f} "
+              f"util {row['utilization']:.2f}")
+
+    payload = {"servers": args.servers, "streams": args.streams,
+               "window_tasks": args.window_tasks, "windows": args.windows,
+               "policies": rows}
+    print(json.dumps(payload, indent=1))
+    if args.json_out != "none":
+        write_bench_json("traffic", payload, out=args.json_out or None)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,22 @@ from repro.core.workload import (TraceConfig, make_trace, paper_rate_for,
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 SCHED_DIR = os.path.join(ART, "scheduling")
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def write_bench_json(name: str, payload: Dict, out: Optional[str] = None) -> str:
+    """Machine-readable perf record: BENCH_<name>.json at the repo root so
+    the numbers are tracked across PRs. Adds a timestamp and jax version."""
+    path = out or os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    payload = dict(payload)
+    payload.setdefault("bench", name)
+    payload.setdefault("timestamp", time.strftime("%Y-%m-%dT%H:%M:%S"))
+    payload.setdefault("jax_version", jax.__version__)
+    payload.setdefault("backend", jax.default_backend())
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"bench json -> {path}")
+    return path
 
 DRL_ALGOS = ("eat", "eat-a", "eat-d", "eat-da", "ppo")
 ALL_ALGOS = DRL_ALGOS + ("greedy", "random", "genetic", "harmony")

@@ -38,6 +38,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--num-envs", type=int, default=4)
     ap.add_argument("--eval-batch", type=int, default=16)
+    ap.add_argument("--curriculum", action="store_true",
+                    help="sample training traces from the scenario grid "
+                         "(rate sweep, cold-start, bursty/flash arrivals) "
+                         "instead of one fixed TraceConfig")
     ap.add_argument("--out", default="artifacts/training_curves.json")
     args = ap.parse_args()
 
@@ -45,6 +49,11 @@ def main():
     rate = paper_rate_for(args.servers)
     tc = TraceConfig(arrival_rate=rate, max_servers=args.servers)
     trace_fn = lambda key: make_trace(key, tc)  # noqa: E731
+    curriculum = None
+    if args.curriculum:
+        from repro.core.scenarios import training_curriculum
+        curriculum = training_curriculum(ecfg)
+        print("curriculum cells:", [sc.name for sc in curriculum])
 
     curves = {}
     eval_policies = {"random": (RO.uniform_policy(ecfg), {}),
@@ -56,7 +65,8 @@ def main():
         if variant == "ppo":
             st, hist = PPO.train_ppo(ecfg, PPO.PPOConfig(), trace_fn,
                                      args.episodes, seed=args.seed,
-                                     log_every=5, num_envs=args.num_envs)
+                                     log_every=5, num_envs=args.num_envs,
+                                     curriculum=curriculum)
             eval_policies[variant] = (PPO.ppo_policy(ecfg), st.params)
         else:
             acfg = AG.AgentConfig(variant=variant)
@@ -64,7 +74,8 @@ def main():
                                  update_every=2)
             ts, hist = SAC.train(ecfg, acfg, scfg, trace_fn, args.episodes,
                                  seed=args.seed, log_every=5,
-                                 num_envs=args.num_envs)
+                                 num_envs=args.num_envs,
+                                 curriculum=curriculum)
             eval_policies[variant] = (
                 SAC.actor_policy(ecfg, acfg, deterministic=True), ts.actor)
         curves[variant] = hist

@@ -143,24 +143,32 @@ def observe(cfg: EnvConfig, trace: Dict, state: EnvState) -> jnp.ndarray:
 
 # ----------------------------------------------------------------------
 def _select_servers(cfg: EnvConfig, state: EnvState, idle, m_k, c_k):
-    """Returns (selected mask (E,), reuse flag). Greedy §V.B.4."""
-    E, K = cfg.num_servers, cfg.max_tasks
-    gang = jnp.clip(state.server_gang, 0, K - 1)
-    has_gang = state.server_gang >= 0
+    """Returns (selected mask (E,), reuse flag). Greedy §V.B.4.
+
+    Gang membership is counted by pairwise label equality over servers, so a
+    gang label is an opaque int: any two servers with the same non-negative
+    label form one gang. Within an episode labels are task ids in [0, K);
+    the streaming engine (`traffic/stream.py`) relabels gangs carried across
+    window seams into [K, K+E) so they can never collide with the next
+    window's task ids.
+    """
+    E = cfg.num_servers
+    gang = state.server_gang
+    has_gang = gang >= 0
+    same = gang[:, None] == gang[None, :]                       # (E, E)
 
     # complete reusable gang: idle, same model, gang size == c_k
     ok = idle & has_gang & (state.server_model == m_k) & (state.server_gang_size == c_k)
-    counts = jnp.zeros((K,), jnp.int32).at[gang].add(ok.astype(jnp.int32))
-    complete = counts == c_k                                   # per gang id
-    any_reuse = jnp.any(complete & (counts > 0))
-    g_star = jnp.argmin(jnp.where(complete & (counts > 0),
-                                  jnp.arange(K), K + 1))
+    counts = jnp.sum(same & ok[None, :], axis=1)               # ok peers per server
+    complete = ok & (counts == c_k)
+    any_reuse = jnp.any(complete)
+    g_star = jnp.min(jnp.where(complete, gang, jnp.int32(2 ** 30)))
     reuse_sel = ok & (gang == g_star)
 
     # fragmentation-aware fresh selection: avoid breaking intact idle gangs
     member_ok = idle & has_gang
-    counts_all = jnp.zeros((K,), jnp.int32).at[gang].add(member_ok.astype(jnp.int32))
-    intact = member_ok & (counts_all[gang] == state.server_gang_size) \
+    counts_all = jnp.sum(same & member_ok[None, :], axis=1)
+    intact = member_ok & (counts_all == state.server_gang_size) \
         & (state.server_gang_size > 0)
     score = jnp.where(idle,
                       intact.astype(jnp.float32) * (100.0 + 10.0 * state.server_gang_size)

@@ -133,22 +133,31 @@ def ppo_update(st: PPOState, batch: Dict, *, ecfg: EV.EnvConfig, pcfg: PPOConfig
 
 
 def train_ppo(ecfg: EV.EnvConfig, pcfg: PPOConfig, trace_fn, num_episodes: int,
-              seed: int = 0, log_every: int = 10, num_envs: int = 4):
+              seed: int = 0, log_every: int = 10, num_envs: int = 4,
+              curriculum=None):
     """On-policy training on top of the batched rollout engine: each
     iteration collects `num_envs` full episodes in one jitted program, then
     runs clipped-surrogate epochs over the pooled (valid) transitions with
-    per-episode GAE."""
+    per-episode GAE. `curriculum` (list of `scenarios.Scenario` sharing
+    `ecfg`) replaces `trace_fn` with per-round sampling from the grid."""
     key = jax.random.PRNGKey(seed)
     key, k0 = jax.random.split(key)
     st = init_ppo(k0, ecfg)
     history = []
     rng = np.random.default_rng(seed)
+    if curriculum:
+        from repro.core.scenarios import curriculum_picker
+        pick = curriculum_picker(ecfg, curriculum)
+    else:
+        pick = None
 
     ep = 0
     while ep < num_episodes:
         B = min(num_envs, num_episodes - ep)
         key, kt, ke = jax.random.split(key, 3)
-        traces = stack_traces([trace_fn(k) for k in jax.random.split(kt, B)])
+        round_trace_fn = pick(rng)[1] if pick else trace_fn
+        traces = stack_traces([round_trace_fn(k)
+                               for k in jax.random.split(kt, B)])
         keys = jax.random.split(ke, B)
         res = RO.batch_rollout(ecfg, traces, ppo_policy(ecfg), st.params,
                                keys, collect=True)

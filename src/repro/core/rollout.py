@@ -57,10 +57,16 @@ class RolloutResult(NamedTuple):
 # ----------------------------------------------------------------------
 def rollout_episode(ecfg: EV.EnvConfig, trace: Dict, policy: Policy, params,
                     key, *, num_steps: Optional[int] = None,
-                    collect: bool = False) -> RolloutResult:
-    """One episode as a lax.scan (traceable; jit/vmap at the call site)."""
+                    collect: bool = False,
+                    init_state: Optional[EV.EnvState] = None) -> RolloutResult:
+    """One episode as a lax.scan (traceable; jit/vmap at the call site).
+
+    `init_state` lets a caller resume from carried environment state (the
+    streaming engine threads server loads / clock between task windows);
+    None means a fresh `EV.reset`, which reproduces the episodic behaviour.
+    """
     T = int(num_steps) if num_steps else ecfg.max_steps
-    state0 = EV.reset(ecfg)
+    state0 = EV.reset(ecfg) if init_state is None else init_state
     obs0 = EV.observe(ecfg, trace, state0)
 
     def body(carry, _):
@@ -97,19 +103,28 @@ def rollout_episode(ecfg: EV.EnvConfig, trace: Dict, policy: Policy, params,
                    static_argnames=("ecfg", "policy", "num_steps", "collect"))
 def batch_rollout(ecfg: EV.EnvConfig, traces: Dict, policy: Policy, params,
                   keys, *, num_steps: Optional[int] = None,
-                  collect: bool = False) -> RolloutResult:
+                  collect: bool = False,
+                  init_state: Optional[EV.EnvState] = None) -> RolloutResult:
     """B episodes in one jitted program.
 
     `traces`: trace dict with a leading (B,) batch axis (see
     `workload.make_trace_batch` / `workload.stack_traces`); `keys`: (B, 2)
-    PRNG keys. `params` is broadcast (shared policy weights). Returns a
+    PRNG keys. `params` is broadcast (shared policy weights). `init_state`,
+    when given, is an `EnvState` whose leaves carry the same (B, ...) batch
+    axis — each episode resumes from its own carried state. Returns a
     `RolloutResult` whose leaves all carry the (B, ...) batch axis.
     """
-    def one(trace, key):
-        return rollout_episode(ecfg, trace, policy, params, key,
-                               num_steps=num_steps, collect=collect)
+    if init_state is None:
+        def one(trace, key):
+            return rollout_episode(ecfg, trace, policy, params, key,
+                                   num_steps=num_steps, collect=collect)
+        return jax.vmap(one)(traces, keys)
 
-    return jax.vmap(one)(traces, keys)
+    def one_from(trace, key, st0):
+        return rollout_episode(ecfg, trace, policy, params, key,
+                               num_steps=num_steps, collect=collect,
+                               init_state=st0)
+    return jax.vmap(one_from)(traces, keys, init_state)
 
 
 # ----------------------------------------------------------------------
@@ -129,4 +144,18 @@ def greedy_policy(ecfg: EV.EnvConfig) -> Policy:
     from repro.core import baselines as BL
     def policy(params, key, trace, state, obs):
         return BL.greedy_act(ecfg, trace, state), {}
+    return policy
+
+
+@functools.lru_cache(maxsize=None)
+def fifo_policy(ecfg: EV.EnvConfig, steps_frac: float = 0.5) -> Policy:
+    """FIFO baseline: always try to schedule the earliest-arrived visible
+    task (queue slot 0 — the visible queue is sorted by arrival) at a fixed
+    inference-step fraction. When the head-of-line gang does not fit the
+    idle servers, the env no-ops and time advances to the next event, so
+    FIFO exhibits classic head-of-line blocking under bursts."""
+    a = jnp.zeros((ecfg.action_dim,), jnp.float32)
+    a = a.at[1].set(steps_frac).at[2].set(1.0)   # a_c=0 (execute), slot 0
+    def policy(params, key, trace, state, obs):
+        return a, {}
     return policy

@@ -235,7 +235,8 @@ def seed_with_demonstrations(buffer: ReplayBuffer, ecfg: EV.EnvConfig,
 
 def train(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, scfg: SACConfig,
           trace_fn, num_episodes: int, seed: int = 0, log_every: int = 10,
-          callback=None, demo_episodes: int = 0, num_envs: int = 4):
+          callback=None, demo_episodes: int = 0, num_envs: int = 4,
+          curriculum=None):
     """Full training loop (Algorithm 2). trace_fn(key) -> trace dict.
 
     Experience comes from the batched rollout engine: each iteration rolls
@@ -243,9 +244,18 @@ def train(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, scfg: SACConfig,
     every transition into the buffer, then runs the same number of gradient
     updates the per-step schedule would have done
     (updates_per_step * new_steps / update_every).
-    demo_episodes > 0 seeds the buffer with Greedy demonstrations."""
+    demo_episodes > 0 seeds the buffer with Greedy demonstrations.
+    `curriculum` (a list of `scenarios.Scenario` sharing `ecfg`, e.g. from
+    `scenarios.training_curriculum`) replaces `trace_fn`: each collection
+    round samples one cell, so the policy trains across the workload grid
+    — rate sweep, cold-start-heavy mixes, bursty/flash arrivals."""
     key = jax.random.PRNGKey(seed)
     rng = np.random.default_rng(seed)
+    if curriculum:
+        from repro.core.scenarios import curriculum_picker
+        pick = curriculum_picker(ecfg, curriculum)
+    else:
+        pick = None
     key, k0 = jax.random.split(key)
     ts = init_train_state(k0, ecfg, acfg)
     buffer = ReplayBuffer(scfg.buffer_capacity, ecfg.obs_shape, ecfg.action_dim)
@@ -260,7 +270,9 @@ def train(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, scfg: SACConfig,
     while ep < num_episodes:
         B = min(num_envs, num_episodes - ep)
         key, kt, ke = jax.random.split(key, 3)
-        traces = stack_traces([trace_fn(k) for k in jax.random.split(kt, B)])
+        round_trace_fn = pick(rng)[1] if pick else trace_fn
+        traces = stack_traces([round_trace_fn(k)
+                               for k in jax.random.split(kt, B)])
         keys = jax.random.split(ke, B)
         warmup = buffer.size < scfg.warmup_steps
         metrics, n_new = collect_batch(ecfg, acfg, ts.actor, traces, keys,

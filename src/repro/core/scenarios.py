@@ -20,7 +20,8 @@ import numpy as np
 
 from repro.core import env as EV
 from repro.core import rollout as RO
-from repro.core.workload import TraceConfig, make_trace_batch, paper_rate_for
+from repro.core.workload import (TraceConfig, make_trace, make_trace_batch,
+                                 paper_rate_for)
 
 # paper cluster configs: servers -> arrival-rate sweep (Tables IX-XI)
 PAPER_RATE_GRID = {
@@ -35,18 +36,36 @@ class Scenario:
     name: str
     ecfg: EV.EnvConfig
     tcfg: TraceConfig
+    # optional open-loop arrival process (repro.traffic.arrivals); None means
+    # the paper's fixed-rate exponential from tcfg.arrival_rate
+    arrival: Optional[object] = None
 
 
 def _make(name: str, num_servers: int, rate: float, *, num_tasks: int = 32,
           num_models: int = 1, model_scale: Tuple[float, ...] = (),
           c_support: Tuple[int, ...] = (1, 2, 4, 8),
-          c_probs: Tuple[float, ...] = (0.35, 0.35, 0.2, 0.1)) -> Scenario:
+          c_probs: Tuple[float, ...] = (0.35, 0.35, 0.2, 0.1),
+          arrival=None) -> Scenario:
     ecfg = EV.EnvConfig(num_servers=num_servers, max_tasks=num_tasks,
                         num_models=num_models, model_scale=model_scale)
     tcfg = TraceConfig(num_tasks=num_tasks, arrival_rate=rate,
                        max_servers=num_servers, num_models=num_models,
                        c_support=c_support, c_probs=c_probs)
-    return Scenario(name=name, ecfg=ecfg, tcfg=tcfg)
+    return Scenario(name=name, ecfg=ecfg, tcfg=tcfg, arrival=arrival)
+
+
+def make_scenario_trace(key, sc: Scenario):
+    """One trace for a scenario cell, honouring its arrival process."""
+    if sc.arrival is None:
+        return make_trace(key, sc.tcfg)
+    from repro.traffic.arrivals import generate_trace
+    return generate_trace(key, sc.arrival, sc.tcfg)
+
+
+def make_scenario_trace_batch(key, sc: Scenario, batch: int):
+    """Batch of scenario traces as one dict of (B, K) arrays."""
+    keys = jax.random.split(key, batch)
+    return jax.vmap(lambda k: make_scenario_trace(k, sc))(keys)
 
 
 # ----------------------------------------------------------------------
@@ -80,9 +99,115 @@ def cold_start_heavy(num_servers: int = 8) -> Scenario:
                  c_probs=(0.05, 0.15, 0.35, 0.45))
 
 
+def poisson_scenario(num_servers: int = 8,
+                     rate: Optional[float] = None) -> Scenario:
+    """Public baseline cell: Poisson arrivals at the paper rate (or an
+    explicit override) — the reference point for the traffic cells."""
+    r = paper_rate_for(num_servers) if rate is None else rate
+    return _make(f"poisson-{num_servers}srv-{r:g}", num_servers, r)
+
+
+def _mmpp_rates(base: float, factor: float) -> Tuple[float, float]:
+    """(quiet, hot) phase rates in ratio factor^2 whose harmonic mean — the
+    long-run MMPP rate under symmetric switching — equals `base`, so bursty
+    cells offer the same mean load as the Poisson reference."""
+    scale = (factor * factor + 1.0) / (2.0 * factor)
+    return (scale * base / factor, scale * base * factor)
+
+
+def bursty_traffic(num_servers: int = 8, *, burst_factor: float = 3.0,
+                   switch: float = 0.05) -> Scenario:
+    """Markov-modulated bursts at the paper's mean rate: quiet/hot phases a
+    factor burst_factor^2 apart, calibrated so the long-run offered load
+    matches the Poisson cell (arXiv 2405.08328)."""
+    from repro.traffic.arrivals import MMPPArrivals
+    base = paper_rate_for(num_servers)
+    proc = MMPPArrivals(rates=_mmpp_rates(base, burst_factor), switch=switch)
+    return _make(f"bursty-{num_servers}srv", num_servers, base, arrival=proc)
+
+
+def diurnal_traffic(num_servers: int = 8, *, amplitude: float = 0.6,
+                    period: float = 2000.0) -> Scenario:
+    """Sinusoidal day/night demand around the paper rate (time-varying
+    workloads, arXiv 2411.01458)."""
+    from repro.traffic.arrivals import DiurnalArrivals
+    base = paper_rate_for(num_servers)
+    proc = DiurnalArrivals(base_rate=base, amplitude=amplitude, period=period)
+    return _make(f"diurnal-{num_servers}srv", num_servers, base, arrival=proc)
+
+
+def flash_crowd(num_servers: int = 8, *, spike_factor: float = 8.0,
+                period: float = 2000.0, spike_duration: float = 200.0) -> Scenario:
+    """Baseline load with periodic flash-crowd spikes (viral AIGC events)."""
+    from repro.traffic.arrivals import FlashCrowdArrivals
+    base = paper_rate_for(num_servers)
+    proc = FlashCrowdArrivals(base_rate=base, spike_rate=base * spike_factor,
+                              period=period, spike_duration=spike_duration)
+    return _make(f"flashcrowd-{num_servers}srv", num_servers, base,
+                 arrival=proc)
+
+
+def traffic_grid(num_servers: int = 8) -> List[Scenario]:
+    """Arrival-process cells for streaming sweeps (poisson baseline via
+    paper_scenarios / arrival_sweep; these add the non-stationary ones)."""
+    return [bursty_traffic(num_servers), diurnal_traffic(num_servers),
+            flash_crowd(num_servers)]
+
+
 def default_grid() -> List[Scenario]:
     return (paper_scenarios() + arrival_sweep(8)
-            + [multi_model_mix(), cold_start_heavy()])
+            + [multi_model_mix(), cold_start_heavy()] + traffic_grid(8))
+
+
+# ----------------------------------------------------------------------
+def training_curriculum(ecfg: EV.EnvConfig, *,
+                        rates: Optional[Sequence[float]] = None,
+                        include_arrival_processes: bool = True) -> List[Scenario]:
+    """Scenario cells for curriculum training (ROADMAP item): every cell
+    shares `ecfg` (so one compiled rollout program serves them all) and
+    varies the workload — arrival rate sweep, cold-start-heavy gang mix,
+    and the non-stationary arrival processes. `sac.train` / `ppo.train_ppo`
+    sample one cell per collection round when given `curriculum=`."""
+    from repro.traffic.arrivals import FlashCrowdArrivals, MMPPArrivals
+    base = paper_rate_for(ecfg.num_servers)
+    rates = tuple(rates) if rates is not None else (0.5 * base, base,
+                                                    1.5 * base)
+
+    def tc(rate, **kw):
+        return TraceConfig(num_tasks=ecfg.max_tasks, arrival_rate=rate,
+                           max_servers=ecfg.num_servers,
+                           num_models=ecfg.num_models, **kw)
+
+    cells = [Scenario(name=f"rate-{r:.3f}", ecfg=ecfg, tcfg=tc(r))
+             for r in rates]
+    cells.append(Scenario(name="coldstart", ecfg=ecfg,
+                          tcfg=tc(base, c_probs=(0.05, 0.15, 0.35, 0.45))))
+    if include_arrival_processes:
+        cells.append(Scenario(
+            name="bursty", ecfg=ecfg, tcfg=tc(base),
+            arrival=MMPPArrivals(rates=_mmpp_rates(base, 3.0))))
+        cells.append(Scenario(
+            name="flashcrowd", ecfg=ecfg, tcfg=tc(base),
+            arrival=FlashCrowdArrivals(base_rate=base,
+                                       spike_rate=base * 8.0)))
+    return cells
+
+
+def curriculum_picker(ecfg: EV.EnvConfig, curriculum: Sequence[Scenario]):
+    """Validate a scenario curriculum against the training env and return
+    pick(rng) -> (cell name, trace_fn). Every cell must share the training
+    ecfg so one compiled rollout program serves them all."""
+    for sc in curriculum:
+        if sc.ecfg != ecfg:
+            raise ValueError(
+                f"curriculum cell {sc.name!r} has a different EnvConfig than "
+                "the training env; build cells with "
+                "scenarios.training_curriculum(ecfg)")
+
+    def pick(rng):
+        sc = curriculum[int(rng.integers(len(curriculum)))]
+        return sc.name, (lambda k: make_scenario_trace(k, sc))
+    return pick
 
 
 # ----------------------------------------------------------------------
@@ -91,7 +216,10 @@ def run_scenario(scenario: Scenario, policy, key, *, batch: int = 32,
     """B fresh traces of one scenario through one jitted batched rollout.
     Returns per-episode (B,) arrays plus scalar mean_* summaries."""
     k_trace, k_run = jax.random.split(key)
-    traces = make_trace_batch(k_trace, scenario.tcfg, batch)
+    if scenario.arrival is None:
+        traces = make_trace_batch(k_trace, scenario.tcfg, batch)
+    else:
+        traces = make_scenario_trace_batch(k_trace, scenario, batch)
     keys = jax.random.split(k_run, batch)
     res = RO.batch_rollout(scenario.ecfg, traces, policy,
                            {} if params is None else params, keys,

@@ -25,23 +25,44 @@ class TraceConfig:
     quality_noise: float = 0.004         # per-task CLIP-score jitter
 
 
-def make_trace(key, tc: TraceConfig):
-    """Returns dict of (K,) arrays: arr_time, c, model, noise."""
-    k1, k2, k3, k4 = jax.random.split(key, 4)
-    gaps = jax.random.exponential(k1, (tc.num_tasks,)) / tc.arrival_rate
-    arr = jnp.cumsum(gaps)
+def _sample_attrs(k_c, k_model, k_noise, tc: TraceConfig, n: int):
+    """(c, model, noise) arrays of length n from the TraceConfig marginals."""
     support = jnp.asarray(tc.c_support, jnp.int32)
     probs = jnp.asarray(tc.c_probs, jnp.float32)
     # renormalise after clipping support to the cluster size
     ok = support <= tc.max_servers
     probs = jnp.where(ok, probs, 0.0)
     probs = probs / probs.sum()
-    idx = jax.random.categorical(k2, jnp.log(probs + 1e-30), shape=(tc.num_tasks,))
+    idx = jax.random.categorical(k_c, jnp.log(probs + 1e-30), shape=(n,))
     c = support[idx]
-    model = jax.random.randint(k3, (tc.num_tasks,), 0, tc.num_models)
-    noise = tc.quality_noise * jax.random.normal(k4, (tc.num_tasks,))
+    model = jax.random.randint(k_model, (n,), 0, tc.num_models)
+    noise = tc.quality_noise * jax.random.normal(k_noise, (n,))
+    return c, model.astype(jnp.int32), noise.astype(jnp.float32)
+
+
+def sample_task_attrs(key, tc: TraceConfig, n: int):
+    """Chunked attribute generation for streaming traffic: (c, model, noise)
+    for n tasks whose arrival times come from an external arrival process."""
+    k_c, k_model, k_noise = jax.random.split(key, 3)
+    return _sample_attrs(k_c, k_model, k_noise, tc, n)
+
+
+def make_trace_from_arrivals(key, arr_times, tc: TraceConfig):
+    """Trace dict for externally supplied (absolute) arrival times."""
+    n = arr_times.shape[0]
+    c, model, noise = sample_task_attrs(key, tc, n)
+    return {"arr_time": jnp.asarray(arr_times, jnp.float32), "c": c,
+            "model": model, "noise": noise}
+
+
+def make_trace(key, tc: TraceConfig):
+    """Returns dict of (K,) arrays: arr_time, c, model, noise."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    gaps = jax.random.exponential(k1, (tc.num_tasks,)) / tc.arrival_rate
+    arr = jnp.cumsum(gaps)
+    c, model, noise = _sample_attrs(k2, k3, k4, tc, tc.num_tasks)
     return {"arr_time": arr.astype(jnp.float32), "c": c,
-            "model": model.astype(jnp.int32), "noise": noise.astype(jnp.float32)}
+            "model": model, "noise": noise}
 
 
 def make_trace_batch(key, tc: TraceConfig, batch: int):

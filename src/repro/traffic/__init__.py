@@ -1,0 +1,18 @@
+"""Streaming traffic subsystem: open-loop arrival processes, windowed
+unbounded-horizon simulation on the batched rollout engine, and streaming
+QoS telemetry. See `arrivals`, `stream`, `metrics`, `policies`, `sweep`."""
+from repro.traffic.arrivals import (DiurnalArrivals, FlashCrowdArrivals,
+                                    MMPPArrivals, PoissonArrivals,
+                                    ReplayArrivals, generate_trace,
+                                    make_process)
+from repro.traffic.metrics import LatencyHistogram, StreamAggregator
+from repro.traffic.stream import (ProcessTaskSource, StreamConfig,
+                                  StreamResult, TraceTaskSource, run_stream)
+
+__all__ = [
+    "PoissonArrivals", "MMPPArrivals", "DiurnalArrivals",
+    "FlashCrowdArrivals", "ReplayArrivals", "make_process", "generate_trace",
+    "LatencyHistogram", "StreamAggregator",
+    "StreamConfig", "StreamResult", "ProcessTaskSource", "TraceTaskSource",
+    "run_stream",
+]

@@ -1,0 +1,215 @@
+"""Open-loop arrival processes for streaming traffic simulation.
+
+Every process is a frozen dataclass with a tiny functional-state protocol:
+
+    state = proc.init(key)                 # pytree of scalars / small arrays
+    state, gaps = proc.sample(state, n)    # n inter-arrival gaps (seconds)
+    proc.mean_rate()                       # long-run tasks/second (analytic)
+
+`sample` is traceable with static n, so the streaming engine jits one
+fixed-chunk sampler per run (vmapped over independent streams) and the
+process state threads through window seams — the horizon is unbounded while
+memory stays O(chunk). Gaps compose into absolute arrival times by cumsum on
+the caller's arrival clock.
+
+Beyond the paper's fixed-rate exponential (§IV.A.1), the library covers the
+workload families motivated by related work: Markov-modulated Poisson bursts
+and multi-rate grids (arXiv 2405.08328) and time-varying demand — diurnal
+sinusoid and flash-crowd spikes — as in two-timescale caching under
+non-stationary load (arXiv 2411.01458), plus replay-from-array for trace-
+driven evaluation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class PoissonArrivals:
+    """Homogeneous Poisson: i.i.d. exponential gaps (the paper's D_g)."""
+    rate: float = 0.1
+
+    def init(self, key):
+        return key
+
+    def sample(self, state, n: int):
+        key, k = jax.random.split(state)
+        gaps = jax.random.exponential(k, (n,)) / self.rate
+        return key, gaps.astype(jnp.float32)
+
+    def mean_rate(self) -> float:
+        return self.rate
+
+
+@dataclass(frozen=True)
+class MMPPArrivals:
+    """Markov-modulated Poisson (bursty): each gap is exponential at the
+    current phase's rate; after every arrival the phase jumps to a uniformly
+    random *other* phase with probability `switch`. Symmetric switching
+    makes the stationary phase distribution uniform, so the long-run rate is
+    the harmonic mean of the phase rates."""
+    rates: Tuple[float, ...] = (0.02, 0.3)
+    switch: float = 0.05
+
+    def init(self, key):
+        key, k = jax.random.split(key)
+        phase = jax.random.randint(k, (), 0, len(self.rates))
+        return (key, phase)
+
+    def sample(self, state, n: int):
+        key, phase = state
+        rates = jnp.asarray(self.rates, jnp.float32)
+        P = len(self.rates)
+
+        def body(ph, k):
+            ke, ks, kp = jax.random.split(k, 3)
+            gap = jax.random.exponential(ke) / rates[ph]
+            jump = jax.random.randint(kp, (), 1, max(P, 2))
+            ph_next = jnp.where(jax.random.bernoulli(ks, self.switch),
+                                (ph + jump) % P, ph)
+            return ph_next, gap
+
+        key, k_scan = jax.random.split(key)
+        phase, gaps = jax.lax.scan(body, phase, jax.random.split(k_scan, n))
+        return (key, phase), gaps.astype(jnp.float32)
+
+    def mean_rate(self) -> float:
+        return len(self.rates) / sum(1.0 / r for r in self.rates)
+
+
+@dataclass(frozen=True)
+class _RateModulated:
+    """Shared machinery for time-varying intensity lambda(t): each gap is
+    exponential at the intensity evaluated at the current arrival clock — a
+    good NHPP approximation whenever gaps are short against the modulation
+    period. State carries (key, arrival clock)."""
+
+    def rate_at(self, t):
+        raise NotImplementedError
+
+    def init(self, key):
+        return (key, jnp.zeros((), jnp.float32))
+
+    def sample(self, state, n: int):
+        key, t = state
+
+        def body(tc, k):
+            lam = jnp.maximum(self.rate_at(tc), 1e-6)
+            gap = jax.random.exponential(k) / lam
+            return tc + gap, gap
+
+        key, k_scan = jax.random.split(key)
+        t, gaps = jax.lax.scan(body, t, jax.random.split(k_scan, n))
+        return (key, t), gaps.astype(jnp.float32)
+
+
+@dataclass(frozen=True)
+class DiurnalArrivals(_RateModulated):
+    """Sinusoidal day/night demand: lambda(t) = base * (1 + amp sin(2 pi t / period))."""
+    base_rate: float = 0.1
+    amplitude: float = 0.6
+    period: float = 2000.0
+
+    def rate_at(self, t):
+        return self.base_rate * (1.0 + self.amplitude *
+                                 jnp.sin(2.0 * jnp.pi * t / self.period))
+
+    def mean_rate(self) -> float:
+        return self.base_rate
+
+
+@dataclass(frozen=True)
+class FlashCrowdArrivals(_RateModulated):
+    """Periodic flash crowds: baseline rate with a spike of `spike_rate`
+    lasting `spike_duration` seconds at the start of every `period`."""
+    base_rate: float = 0.05
+    spike_rate: float = 0.5
+    period: float = 2000.0
+    spike_duration: float = 200.0
+
+    def rate_at(self, t):
+        in_spike = jnp.mod(t, self.period) < self.spike_duration
+        return jnp.where(in_spike, self.spike_rate, self.base_rate)
+
+    def mean_rate(self) -> float:
+        duty = self.spike_duration / self.period
+        return self.spike_rate * duty + self.base_rate * (1.0 - duty)
+
+
+@dataclass(frozen=True, eq=False)
+class ReplayArrivals:
+    """Replay absolute arrival times from an array; wraps around with a
+    period of (last arrival + one mean gap) so the stream is unbounded.
+
+    By default every stream replays the array from index 0 (deterministic
+    round-trip — gaps cumsum back to `times` exactly). With `stagger=True`,
+    `init` draws a key-dependent start index, so parallel streams replay
+    phase-shifted copies instead of bit-identical arrival sequences.
+    eq=False keeps the dataclass hashable by identity despite the array
+    field (required for use as a static jit argument)."""
+    times: Any = ()
+    stagger: bool = False
+
+    def init(self, key):
+        if not self.stagger:
+            return (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+        arr, span = self._arr_span()
+        idx = jax.random.randint(key, (), 0, arr.shape[0])
+        # last emitted time = the wrapped predecessor of arr[idx], so the
+        # first gap matches what a from-zero replay would produce there
+        prev = jnp.where(idx > 0, arr[idx - 1], 0.0)
+        return (idx, prev)
+
+    def _arr_span(self):
+        arr = jnp.asarray(self.times, jnp.float32)
+        span = arr[-1] * (arr.shape[0] + 1) / arr.shape[0]
+        return arr, span
+
+    def sample(self, state, n: int):
+        idx0, last = state
+        arr, span = self._arr_span()
+        N = arr.shape[0]
+        i = idx0 + jnp.arange(n)
+        t = arr[i % N] + (i // N).astype(jnp.float32) * span
+        gaps = jnp.diff(jnp.concatenate([last[None], t]))
+        return (idx0 + n, t[-1]), gaps.astype(jnp.float32)
+
+    def mean_rate(self) -> float:
+        import numpy as np
+        arr = np.asarray(self.times, np.float32)
+        span = float(arr[-1]) * (len(arr) + 1) / len(arr)
+        return len(arr) / span
+
+
+# ----------------------------------------------------------------------
+_KINDS = {
+    "poisson": PoissonArrivals,
+    "mmpp": MMPPArrivals,
+    "diurnal": DiurnalArrivals,
+    "flash": FlashCrowdArrivals,
+    "replay": ReplayArrivals,
+}
+
+
+def make_process(kind: str, **kwargs):
+    """Registry constructor: make_process("mmpp", rates=(0.02, 0.3))."""
+    if kind not in _KINDS:
+        raise ValueError(f"unknown arrival process {kind!r}; "
+                         f"choose from {sorted(_KINDS)}")
+    return _KINDS[kind](**kwargs)
+
+
+def generate_trace(key, proc, tc, n: int = None):
+    """Episodic bridge: one fixed-size trace dict (`workload.make_trace`
+    schema) whose arrival times come from `proc` instead of the fixed-rate
+    exponential. Used by scenarios that carry an arrival-process field."""
+    from repro.core.workload import make_trace_from_arrivals
+    n = int(n) if n else tc.num_tasks
+    k_arr, k_attr = jax.random.split(key)
+    _, gaps = proc.sample(proc.init(k_arr), n)
+    arr = jnp.cumsum(gaps)
+    return make_trace_from_arrivals(k_attr, arr, tc)

@@ -1,0 +1,62 @@
+"""Policy-adapter layer: one name -> (rollout policy, params) for streaming.
+
+Everything the streaming engine and the sweep driver schedule with goes
+through here, so a sweep cell can say `--policies random,fifo,greedy,eat`
+and get the paper's baselines plus the EAT SAC agent under one protocol
+(`rollout.Policy`). The EAT adapter evaluates the diffusion actor
+deterministically; weights come from a checkpoint directory when given,
+otherwise from a fresh initialisation (useful for plumbing/perf runs — the
+summary then reflects an untrained policy and says so).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.core import env as EV
+from repro.core import rollout as RO
+
+BASELINES = ("random", "fifo", "greedy")
+LEARNED = ("eat", "ppo")
+
+
+def available_policies() -> Tuple[str, ...]:
+    return BASELINES + LEARNED
+
+
+def make_policy(name: str, ecfg: EV.EnvConfig, *, acfg=None,
+                checkpoint: Optional[str] = None, params=None,
+                seed: int = 0) -> Tuple[RO.Policy, Dict]:
+    """Resolve a policy name to (policy_fn, params) for `batch_rollout` /
+    `run_stream`. `params` short-circuits loading (already-trained weights);
+    `checkpoint` restores the latest step from a checkpoint directory."""
+    if name == "random":
+        return RO.uniform_policy(ecfg), {}
+    if name == "fifo":
+        return RO.fifo_policy(ecfg), {}
+    if name == "greedy":
+        return RO.greedy_policy(ecfg), {}
+    if name == "eat":
+        from repro.core import agent as AG
+        from repro.core import sac as SAC
+        acfg = acfg or AG.AgentConfig()
+        if params is None:
+            params = AG.init_actor(jax.random.PRNGKey(seed), ecfg, acfg)
+            if checkpoint:
+                params = _restore(checkpoint, params)
+        return SAC.actor_policy(ecfg, acfg, deterministic=True), params
+    if name == "ppo":
+        from repro.core import ppo as PPO
+        if params is None:
+            params = PPO.init_ppo(jax.random.PRNGKey(seed), ecfg).params
+            if checkpoint:
+                params = _restore(checkpoint, params)
+        return PPO.ppo_policy(ecfg), params
+    raise ValueError(f"unknown policy {name!r}; "
+                     f"choose from {available_policies()}")
+
+
+def _restore(directory: str, target):
+    from repro.common.checkpoint import restore_checkpoint
+    return restore_checkpoint(directory, target)

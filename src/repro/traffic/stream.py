@@ -1,0 +1,281 @@
+"""Unbounded-horizon windowed streaming on the batched rollout engine.
+
+The episodic engine (`core/rollout.py`) runs one fixed-size trace to
+completion. This module chains it over consecutive fixed-size *task windows*
+with carried environment state, so a run covers 10^5-10^6 tasks at O(window)
+memory:
+
+    window w trace  ->  batch_rollout(init_state = carry_{w-1})  ->  seam:
+        * clock rebased to 0 (float32 stays precise at any horizon)
+        * residual server busy time / model / gang metadata carried
+        * carried gangs relabelled into [K, K+E) so their labels can never
+          collide with the next window's task ids (reuse survives the seam)
+        * unscheduled tasks compacted and re-injected into the next window
+          (oldest beyond `max_carry` are shed and counted as dropped)
+
+Each window is B parallel independent streams in one jitted program
+(`batch_rollout` vmap). Arrival times are open-loop: a `TaskSource` draws
+fixed-shape chunks from an arrival process (`arrivals.py`) on its own clock,
+regardless of how far the scheduler has fallen behind. Per-window QoS stats
+are reduced device-side and folded into a `StreamAggregator` on the host.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import env as EV
+from repro.core import rollout as RO
+from repro.core.workload import TraceConfig, sample_task_attrs
+from repro.traffic import metrics as MX
+
+_COLS = ("arr_time", "c", "model", "noise")
+_DTYPES = {"arr_time": np.float32, "c": np.int32, "model": np.int32,
+           "noise": np.float32}
+
+
+@dataclass(frozen=True)
+class StreamConfig:
+    num_windows: int = 16
+    num_streams: int = 1                    # B independent parallel streams
+    max_steps_per_window: Optional[int] = None   # default min(4K, max_steps)
+    max_carry: Optional[int] = None         # leftover slots kept; default K//2
+    resp_sla: float = 120.0                 # QoS latency budget (seconds)
+    chunk_size: int = 0                     # arrival buffer refill; 0 = 4K
+
+
+# ----------------------------------------------------------------------
+# task sources: host-side open-loop suppliers of (arr_time, c, model, noise)
+class ProcessTaskSource:
+    """Draws tasks from an arrival process + TraceConfig attribute marginals.
+
+    Keeps one process state and one absolute arrival clock per stream;
+    refills per-stream buffers in fixed-size chunks through a single jitted,
+    vmapped sampler, so chunk generation compiles once per run.
+    """
+
+    def __init__(self, proc, tc: TraceConfig, key, num_streams: int = 1,
+                 chunk_size: int = 0):
+        self.proc = proc
+        self.tc = tc
+        self.B = int(num_streams)
+        self.chunk = int(chunk_size) if chunk_size else max(4 * tc.num_tasks, 64)
+        k_init, self._attr_key = jax.random.split(key)
+        self._states = jax.vmap(proc.init)(jax.random.split(k_init, self.B))
+        self._sample = jax.jit(jax.vmap(lambda s: proc.sample(s, self.chunk)))
+        self._attrs = jax.jit(jax.vmap(
+            lambda k: sample_task_attrs(k, tc, self.chunk)))
+        self._clock = np.zeros(self.B, np.float64)   # absolute arrival clock
+        self._buf = [{c: np.zeros((0,), _DTYPES[c]) for c in _COLS}
+                     for _ in range(self.B)]
+
+    def _refill(self) -> None:
+        self._states, gaps = self._sample(self._states)
+        gaps = np.asarray(gaps, np.float64)                    # (B, chunk)
+        arr = self._clock[:, None] + np.cumsum(gaps, axis=1)
+        self._clock = arr[:, -1].copy()
+        self._attr_key, k = jax.random.split(self._attr_key)
+        c, model, noise = self._attrs(jax.random.split(k, self.B))
+        c, model, noise = (np.asarray(c), np.asarray(model), np.asarray(noise))
+        for b in range(self.B):
+            new = {"arr_time": arr[b].astype(np.float64), "c": c[b],
+                   "model": model[b], "noise": noise[b]}
+            self._buf[b] = {col: np.concatenate([self._buf[b][col], new[col]])
+                            for col in _COLS}
+
+    def take(self, stream: int, n: int) -> Dict[str, np.ndarray]:
+        """Pop the next n tasks of one stream (arr_time is absolute)."""
+        while len(self._buf[stream]["arr_time"]) < n:
+            self._refill()
+        out = {col: self._buf[stream][col][:n] for col in _COLS}
+        self._buf[stream] = {col: self._buf[stream][col][n:] for col in _COLS}
+        return out
+
+
+class TraceTaskSource:
+    """Finite source replaying explicit traces with full attributes —
+    feed an episodic trace through the streaming engine verbatim (parity
+    tests, trace-driven evaluation). `traces` is a dict of (B, N) arrays
+    with *absolute* arrival times."""
+
+    def __init__(self, traces: Dict):
+        self._cols = {c: np.asarray(traces[c]) for c in _COLS}
+        self.B, self.N = self._cols["arr_time"].shape
+        self._cursor = np.zeros(self.B, np.int64)
+
+    def take(self, stream: int, n: int) -> Dict[str, np.ndarray]:
+        i = int(self._cursor[stream])
+        if i + n > self.N:
+            raise ValueError(f"TraceTaskSource exhausted: stream {stream} "
+                             f"has {self.N - i} tasks left, asked for {n}")
+        self._cursor[stream] = i + n
+        return {c: v[stream, i:i + n] for c, v in self._cols.items()}
+
+
+# ----------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("ecfg",))
+def _window_seam(ecfg: EV.EnvConfig, traces: Dict, state: EV.EnvState,
+                 edges: jnp.ndarray, resp_sla: jnp.ndarray):
+    """Device-side seam: per-window QoS stats + next-window carry state +
+    compacted leftovers, vmapped over the stream axis."""
+    K, E = ecfg.max_tasks, ecfg.num_servers
+
+    def one(trace, st):
+        te = st.time
+        sched = st.task_status >= 1
+        fsch = sched.astype(jnp.float32)
+        resp = jnp.where(sched, st.task_finish - trace["arr_time"], 0.0)
+        viol_q = sched & (st.task_quality < ecfg.q_min)
+        viol_t = sched & (resp > resp_sla)
+        viol = viol_q | viol_t
+        busy = jnp.sum(jnp.where(sched, trace["c"].astype(jnp.float32)
+                                 * (st.task_finish - st.task_start), 0.0))
+        stats = {
+            "n_sched": jnp.sum(sched.astype(jnp.int32)),
+            "n_done": jnp.sum((st.task_status == 2).astype(jnp.int32)),
+            "n_reload": jnp.sum(jnp.where(sched, st.task_reload, 0)),
+            "n_viol": jnp.sum(viol.astype(jnp.int32)),
+            "n_viol_q": jnp.sum(viol_q.astype(jnp.int32)),
+            "n_viol_t": jnp.sum(viol_t.astype(jnp.int32)),
+            "sum_resp": jnp.sum(resp),
+            "max_resp": jnp.max(resp),
+            "sum_quality": jnp.sum(jnp.where(sched, st.task_quality, 0.0)),
+            "sum_steps": jnp.sum(fsch * st.task_steps),
+            "busy_time": busy,
+            "elapsed": te,
+            "hist": MX.bucketize_counts(resp, sched, edges),
+        }
+
+        # ---- carry: rebase the clock, keep server occupancy + gang ids --
+        gang = st.server_gang
+        has = gang >= 0
+        same = gang[:, None] == gang[None, :]
+        leader = jnp.min(jnp.where(same & has[None, :],
+                                   jnp.arange(E)[None, :], E), axis=1)
+        carry = EV.EnvState(
+            time=jnp.zeros((), jnp.float32),
+            server_free_at=jnp.maximum(st.server_free_at - te, 0.0),
+            server_model=st.server_model,
+            server_gang=jnp.where(has, K + leader, -1).astype(jnp.int32),
+            server_gang_size=st.server_gang_size,
+            task_status=jnp.zeros((K,), jnp.int32),
+            task_start=jnp.zeros((K,), jnp.float32),
+            task_finish=jnp.zeros((K,), jnp.float32),
+            task_steps=jnp.zeros((K,), jnp.int32),
+            task_quality=jnp.zeros((K,), jnp.float32),
+            task_reload=jnp.zeros((K,), jnp.int32),
+            steps_taken=jnp.zeros((), jnp.int32),
+        )
+
+        # ---- leftovers: unscheduled tasks, oldest first, clock rebased --
+        left = st.task_status == 0
+        n_left = jnp.sum(left.astype(jnp.int32))
+        order = jnp.argsort(jnp.where(left, trace["arr_time"], EV.INF))
+        leftovers = {c: trace[c][order] for c in _COLS}
+        leftovers["arr_time"] = leftovers["arr_time"] - te
+        return stats, carry, leftovers, n_left
+
+    return jax.vmap(one)(traces, state)
+
+
+def _reset_batch(ecfg: EV.EnvConfig, B: int) -> EV.EnvState:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (B,) + x.shape), EV.reset(ecfg))
+
+
+class StreamResult(NamedTuple):
+    summary: Dict
+    per_window: List[Dict]
+    aggregator: MX.StreamAggregator
+    final_carry: EV.EnvState
+
+
+# ----------------------------------------------------------------------
+def run_stream(ecfg: EV.EnvConfig, policy, params, source, key,
+               scfg: StreamConfig = StreamConfig()) -> StreamResult:
+    """Drive `num_windows` windows of K = ecfg.max_tasks tasks per stream.
+
+    Window w uses PRNG key fold_in(key, w) split over the B streams, so a
+    single-window stream from a fresh carry reproduces the episodic
+    `batch_rollout(ecfg, traces, policy, params, split(fold_in(key, 0), B))`
+    bit-for-bit. Device memory is O(B * K) regardless of the horizon.
+    """
+    K, B = ecfg.max_tasks, scfg.num_streams
+    T = scfg.max_steps_per_window or min(4 * K, ecfg.max_steps)
+    max_carry = K // 2 if scfg.max_carry is None else int(scfg.max_carry)
+    if not 0 <= max_carry < K:
+        raise ValueError(f"max_carry must be in [0, {K}), got {max_carry}")
+    edges = jnp.asarray(MX.DEFAULT_EDGES)
+    sla = jnp.float32(scfg.resp_sla)
+    agg = MX.StreamAggregator(ecfg.num_servers, ecfg.q_min, scfg.resp_sla,
+                              edges=MX.DEFAULT_EDGES)
+
+    carry = _reset_batch(ecfg, B)
+    leftovers = [{c: np.zeros((0,), _DTYPES[c]) for c in _COLS}
+                 for _ in range(B)]
+    t0 = np.zeros(B, np.float64)            # absolute epoch of window start
+    per_window: List[Dict] = []
+
+    for w in range(scfg.num_windows):
+        cols = {c: np.zeros((B, K), _DTYPES[c]) for c in _COLS}
+        n_injected = np.zeros(B, np.int64)
+        n_dropped = np.zeros(B, np.int64)
+        for b in range(B):
+            lo = leftovers[b]
+            nl = len(lo["arr_time"])
+            if nl > max_carry:             # shed the stalest backlog
+                n_dropped[b] = nl - max_carry
+                lo = {c: v[nl - max_carry:] for c, v in lo.items()}
+                nl = max_carry
+            n_new = K - nl
+            new = source.take(b, n_new)
+            n_injected[b] = n_new
+            for c in _COLS:
+                cols[c][b, :nl] = lo[c]
+                if c == "arr_time":        # absolute -> window-local clock
+                    cols[c][b, nl:] = (new[c].astype(np.float64)
+                                       - t0[b]).astype(np.float32)
+                else:
+                    cols[c][b, nl:] = new[c]
+        traces = {c: jnp.asarray(v) for c, v in cols.items()}
+        keys = jax.random.split(jax.random.fold_in(key, w), B)
+        res = RO.batch_rollout(ecfg, traces, policy, params, keys,
+                               num_steps=T, init_state=carry)
+        stats, carry, lcols, n_left = _window_seam(ecfg, traces,
+                                                   res.final_state, edges, sla)
+        n_left = np.asarray(n_left)
+        lcols = {c: np.asarray(v) for c, v in lcols.items()}
+        leftovers = [{c: lcols[c][b, :n_left[b]] for c in _COLS}
+                     for b in range(B)]
+        t0 += np.asarray(stats["elapsed"], np.float64)
+
+        rec = {k: np.asarray(v) for k, v in stats.items()}
+        rec["n_injected"] = n_injected
+        rec["n_dropped"] = n_dropped
+        rec["n_leftover"] = n_left.astype(np.int64)
+        agg.update(rec)
+        n_sched_w = int(rec["n_sched"].sum())
+        per_window.append({
+            "window": w,
+            "injected": int(n_injected.sum()),
+            "scheduled": n_sched_w,
+            "dropped": int(n_dropped.sum()),
+            "leftover": int(n_left.sum()),
+            "mean_elapsed": float(np.mean(rec["elapsed"])),
+            "mean_latency": float(rec["sum_resp"].sum() / max(n_sched_w, 1)),
+            "episode_return_mean": float(np.mean(np.asarray(
+                res.metrics["episode_return"]))),
+        })
+
+    summary = agg.summary()
+    summary["tasks_leftover"] = int(sum(len(l["arr_time"])
+                                        for l in leftovers))
+    summary["num_streams"] = B
+    summary["window_tasks"] = K
+    return StreamResult(summary=summary, per_window=per_window,
+                        aggregator=agg, final_carry=carry)

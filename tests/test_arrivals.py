@@ -1,0 +1,148 @@
+"""Arrival processes: empirical rates vs configured means, replay
+round-trip, chunked statefulness, and the scenario/workload bridges."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.traffic.arrivals import (DiurnalArrivals, FlashCrowdArrivals,
+                                    MMPPArrivals, PoissonArrivals,
+                                    ReplayArrivals, generate_trace,
+                                    make_process)
+
+
+def _empirical_rate(proc, n=4000, seed=0, chunks=4):
+    """Long-run arrivals/second measured over `chunks` sequential chunks
+    (exercises state threading across chunk boundaries)."""
+    state = proc.init(jax.random.PRNGKey(seed))
+    total = 0.0
+    for _ in range(chunks):
+        state, gaps = proc.sample(state, n // chunks)
+        total += float(jnp.sum(gaps))
+    return n / total
+
+
+def test_poisson_empirical_rate():
+    proc = PoissonArrivals(rate=0.1)
+    assert _empirical_rate(proc) == pytest.approx(0.1, rel=0.08)
+
+
+def test_mmpp_empirical_rate_and_burstiness():
+    proc = MMPPArrivals(rates=(0.02, 0.3), switch=0.05)
+    assert _empirical_rate(proc, n=8000) == pytest.approx(proc.mean_rate(),
+                                                          rel=0.15)
+    # bursty: squared coefficient of variation of gaps well above the
+    # exponential's 1.0
+    state = proc.init(jax.random.PRNGKey(3))
+    _, gaps = proc.sample(state, 8000)
+    g = np.asarray(gaps)
+    assert np.var(g) / np.mean(g) ** 2 > 1.5
+
+
+def test_diurnal_empirical_rate_and_phase():
+    proc = DiurnalArrivals(base_rate=0.1, amplitude=0.6, period=2000.0)
+    assert _empirical_rate(proc, n=8000) == pytest.approx(0.1, rel=0.15)
+    # more arrivals land in the sinusoid's peak half-period than the trough
+    state = proc.init(jax.random.PRNGKey(1))
+    _, gaps = proc.sample(state, 8000)
+    t = np.cumsum(np.asarray(gaps))
+    phase = np.mod(t, proc.period) / proc.period
+    peak = np.sum(phase < 0.5)          # sin > 0 on the first half
+    trough = np.sum(phase >= 0.5)
+    assert peak > 1.3 * trough
+
+
+def test_flash_crowd_rate_and_spikes():
+    proc = FlashCrowdArrivals(base_rate=0.05, spike_rate=0.5,
+                              period=2000.0, spike_duration=200.0)
+    assert _empirical_rate(proc, n=8000) == pytest.approx(proc.mean_rate(),
+                                                          rel=0.15)
+    state = proc.init(jax.random.PRNGKey(2))
+    _, gaps = proc.sample(state, 6000)
+    t = np.cumsum(np.asarray(gaps))
+    in_spike = np.mod(t, proc.period) < proc.spike_duration
+    # 10% of the time at 10x the rate -> roughly half the arrivals
+    assert 0.3 < np.mean(in_spike) < 0.75
+
+
+def test_replay_round_trip():
+    arr = np.asarray([3.0, 5.5, 9.0, 20.0, 21.5], np.float32)
+    proc = ReplayArrivals(times=arr)
+    state = proc.init(jax.random.PRNGKey(0))
+    state, gaps = proc.sample(state, 5)
+    np.testing.assert_allclose(np.cumsum(np.asarray(gaps)), arr, rtol=1e-6)
+    # wrap-around continues monotonically with the configured span
+    _, gaps2 = proc.sample(state, 5)
+    t2 = arr[-1] + np.cumsum(np.asarray(gaps2))
+    span = arr[-1] * (len(arr) + 1) / len(arr)
+    np.testing.assert_allclose(t2, arr + span, rtol=1e-5)
+    assert proc.mean_rate() == pytest.approx(len(arr) / span)
+
+
+def test_replay_split_chunks_match_one_shot():
+    arr = np.cumsum(np.random.default_rng(0).exponential(10.0, 12)).astype(
+        np.float32)
+    proc = ReplayArrivals(times=arr)
+    s = proc.init(jax.random.PRNGKey(0))
+    s, g1 = proc.sample(s, 7)
+    s, g2 = proc.sample(s, 5)
+    whole = proc.sample(proc.init(jax.random.PRNGKey(0)), 12)[1]
+    np.testing.assert_allclose(np.concatenate([g1, g2]), whole, rtol=1e-6)
+
+
+def test_bursty_scenario_offers_paper_mean_load():
+    """The MMPP cell's long-run rate must match the Poisson reference, so
+    bursty-vs-poisson comparisons isolate burstiness from mean load."""
+    from repro.core.scenarios import bursty_traffic
+    from repro.core.workload import paper_rate_for
+    sc = bursty_traffic(8, burst_factor=3.0)
+    assert sc.arrival.mean_rate() == pytest.approx(paper_rate_for(8),
+                                                   rel=1e-6)
+    hot, quiet = max(sc.arrival.rates), min(sc.arrival.rates)
+    assert hot / quiet == pytest.approx(9.0, rel=1e-6)
+
+
+def test_replay_stagger_desyncs_streams():
+    arr = np.cumsum(np.full(32, 5.0)).astype(np.float32)
+    proc = ReplayArrivals(times=arr, stagger=True)
+    keys = jax.random.split(jax.random.PRNGKey(0), 8)
+    starts = {int(proc.init(k)[0]) for k in keys}
+    assert len(starts) > 1          # streams start at distinct phases
+    # a staggered stream still emits positive gaps through the wrap
+    s = proc.init(keys[0])
+    _, gaps = proc.sample(s, 64)
+    assert np.all(np.asarray(gaps) > 0)
+
+
+def test_make_process_registry():
+    assert isinstance(make_process("poisson", rate=0.2), PoissonArrivals)
+    assert isinstance(make_process("mmpp"), MMPPArrivals)
+    with pytest.raises(ValueError):
+        make_process("fractal")
+
+
+def test_generate_trace_schema():
+    from repro.core.workload import TraceConfig
+    tc = TraceConfig(num_tasks=16, arrival_rate=0.1, max_servers=4)
+    trace = generate_trace(jax.random.PRNGKey(0), PoissonArrivals(0.1), tc)
+    assert set(trace) == {"arr_time", "c", "model", "noise"}
+    assert trace["arr_time"].shape == (16,)
+    arr = np.asarray(trace["arr_time"])
+    assert np.all(np.diff(arr) >= 0) and arr[0] > 0
+    assert np.all(np.asarray(trace["c"]) <= 4)
+
+
+def test_scenario_arrival_field_rollout():
+    from repro.core import rollout as RO
+    from repro.core import scenarios as SC
+    sc = SC.bursty_traffic(4)
+    sc = SC.Scenario(name=sc.name,
+                     ecfg=SC.EV.EnvConfig(num_servers=4, max_tasks=8,
+                                          queue_window=4, max_steps=64),
+                     tcfg=SC.TraceConfig(num_tasks=8, arrival_rate=0.05,
+                                         max_servers=4),
+                     arrival=sc.arrival)
+    m = SC.run_scenario(sc, RO.uniform_policy(sc.ecfg), jax.random.PRNGKey(0),
+                        batch=2)
+    assert m["episode_return"].shape == (2,)
+    assert np.isfinite(m["mean_avg_response"])

@@ -1,0 +1,224 @@
+"""Streaming traffic engine: single-window parity with the episodic
+batched rollout, task conservation across window seams, QoS telemetry
+sanity, and the curriculum training hook."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rollout as RO
+from repro.core.env import EnvConfig
+from repro.core.workload import TraceConfig, make_trace
+from repro.traffic import (LatencyHistogram, PoissonArrivals,
+                           ProcessTaskSource, StreamConfig, TraceTaskSource,
+                           run_stream)
+
+ECFG = EnvConfig(num_servers=4, max_tasks=32, queue_window=4, max_steps=128)
+TC = TraceConfig(num_tasks=32, arrival_rate=0.05, max_servers=4)
+
+
+def _b1(tree):
+    return jax.tree_util.tree_map(lambda x: x[None], tree)
+
+
+# ------------------------------------------------------- parity
+@pytest.mark.parametrize("policy_fn", [RO.uniform_policy, RO.greedy_policy,
+                                       RO.fifo_policy],
+                         ids=["random", "greedy", "fifo"])
+def test_single_window_stream_matches_episodic(policy_fn):
+    """A one-window stream over the exact episodic trace reproduces the
+    episodic batch_rollout metrics (acceptance: 32-task trace)."""
+    trace = make_trace(jax.random.PRNGKey(0), TC)
+    policy = policy_fn(ECFG)
+    base_key = jax.random.PRNGKey(42)
+    # the stream derives window w's keys as split(fold_in(key, w), B)
+    ref_keys = jax.random.split(jax.random.fold_in(base_key, 0), 1)
+    ref = RO.batch_rollout(ECFG, _b1(trace), policy, {}, ref_keys)
+
+    res = run_stream(ECFG, policy, {}, TraceTaskSource(_b1(trace)), base_key,
+                     StreamConfig(num_windows=1, num_streams=1,
+                                  max_steps_per_window=ECFG.max_steps))
+    s = res.summary
+    m = {k: float(np.asarray(v)[0]) for k, v in ref.metrics.items()}
+    assert s["tasks_scheduled"] == int(m["num_scheduled"])
+    assert s["tasks_completed_in_window"] == int(m["num_done"])
+    np.testing.assert_allclose(s["avg_quality"], m["avg_quality"], rtol=1e-6)
+    np.testing.assert_allclose(s["latency_mean"], m["avg_response"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(s["cold_start_rate"], m["reload_rate"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(s["avg_steps"], m["avg_steps"], rtol=1e-6)
+    np.testing.assert_allclose(res.per_window[0]["episode_return_mean"],
+                               m["episode_return"], rtol=1e-6)
+
+
+def test_single_window_stream_covers_all_tasks():
+    trace = make_trace(jax.random.PRNGKey(5), TC)
+    res = run_stream(ECFG, RO.greedy_policy(ECFG), {},
+                     TraceTaskSource(_b1(trace)), jax.random.PRNGKey(7),
+                     StreamConfig(num_windows=1, num_streams=1,
+                                  max_steps_per_window=ECFG.max_steps))
+    assert res.summary["tasks_injected"] == TC.num_tasks
+    assert (res.summary["tasks_scheduled"]
+            + res.summary["tasks_leftover"]) == TC.num_tasks
+
+
+# ------------------------------------------------------- conservation
+@pytest.mark.parametrize("rate,policy_fn", [(0.05, RO.fifo_policy),
+                                            (0.5, RO.uniform_policy)],
+                         ids=["light-fifo", "overload-random"])
+def test_multi_window_task_conservation(rate, policy_fn):
+    """No task is lost or duplicated at window seams: every injected task is
+    scheduled, dropped (overload shedding), or still queued at the end."""
+    ecfg = EnvConfig(num_servers=4, max_tasks=16, queue_window=4,
+                     max_steps=64)
+    tc = TraceConfig(num_tasks=16, arrival_rate=rate, max_servers=4)
+    src = ProcessTaskSource(PoissonArrivals(rate), tc, jax.random.PRNGKey(0),
+                            num_streams=3)
+    res = run_stream(ecfg, policy_fn(ecfg), {}, src, jax.random.PRNGKey(1),
+                     StreamConfig(num_windows=6, num_streams=3))
+    s = res.summary
+    assert s["tasks_injected"] > 0
+    assert (s["tasks_injected"]
+            == s["tasks_scheduled"] + s["tasks_dropped"]
+            + s["tasks_leftover"]), s
+    # per-window ledger: injected fills exactly the non-carried slots
+    for w in res.per_window:
+        assert 0 <= w["leftover"] <= 3 * 16
+        assert w["injected"] + w["dropped"] >= 0
+
+
+def test_stream_carries_backlog_not_resets():
+    """Under overload the carried state raises later windows' latency —
+    seams must not silently reset waiting time or server occupancy."""
+    ecfg = EnvConfig(num_servers=4, max_tasks=16, queue_window=4,
+                     max_steps=64)
+    tc = TraceConfig(num_tasks=16, arrival_rate=0.5, max_servers=4)
+    src = ProcessTaskSource(PoissonArrivals(0.5), tc, jax.random.PRNGKey(2),
+                            num_streams=2)
+    res = run_stream(ecfg, RO.fifo_policy(ecfg), {}, src,
+                     jax.random.PRNGKey(3),
+                     StreamConfig(num_windows=8, num_streams=2))
+    # offered load >> capacity: response times must climb across windows
+    assert (res.per_window[-1]["mean_latency"]
+            > 2.0 * res.per_window[0]["mean_latency"] > 0.0)
+
+
+def test_truncated_windows_carry_leftovers():
+    """A step budget too small to drain the window forces unscheduled tasks
+    across the seam; they must reappear (conservation) and eventually age."""
+    ecfg = EnvConfig(num_servers=4, max_tasks=16, queue_window=4,
+                     max_steps=64)
+    tc = TraceConfig(num_tasks=16, arrival_rate=0.2, max_servers=4)
+    src = ProcessTaskSource(PoissonArrivals(0.2), tc, jax.random.PRNGKey(8),
+                            num_streams=2)
+    res = run_stream(ecfg, RO.uniform_policy(ecfg), {}, src,
+                     jax.random.PRNGKey(9),
+                     StreamConfig(num_windows=6, num_streams=2,
+                                  max_steps_per_window=12))
+    s = res.summary
+    assert sum(w["leftover"] for w in res.per_window) > 0
+    assert (s["tasks_injected"]
+            == s["tasks_scheduled"] + s["tasks_dropped"]
+            + s["tasks_leftover"])
+
+
+# ------------------------------------------------------- telemetry
+def test_summary_telemetry_sanity():
+    ecfg = EnvConfig(num_servers=4, max_tasks=16, queue_window=4,
+                     max_steps=64)
+    tc = TraceConfig(num_tasks=16, arrival_rate=0.05, max_servers=4)
+    src = ProcessTaskSource(PoissonArrivals(0.05), tc, jax.random.PRNGKey(4),
+                            num_streams=2)
+    s = run_stream(ecfg, RO.greedy_policy(ecfg), {}, src,
+                   jax.random.PRNGKey(5),
+                   StreamConfig(num_windows=4, num_streams=2)).summary
+    assert s["latency_p50"] <= s["latency_p95"] <= s["latency_p99"]
+    assert s["latency_p99"] <= s["latency_max"] + 1e-6
+    assert 0.0 <= s["qos_violation_rate"] <= 1.0
+    assert 0.0 <= s["cold_start_rate"] <= 1.0
+    assert s["utilization"] >= 0.0
+    assert s["goodput_per_s"] <= s["throughput_per_s"] + 1e-9
+    assert s["sim_seconds"] > 0
+
+
+def test_latency_histogram_percentiles():
+    h = LatencyHistogram()
+    assert np.isnan(h.percentile(0.5))
+    vals = np.geomspace(1.0, 1000.0, 500)
+    h.add_values(vals)
+    assert h.total == 500
+    for q in (0.5, 0.95, 0.99):
+        exact = np.percentile(vals, 100 * q)
+        est = h.percentile(q)
+        assert est == pytest.approx(exact, rel=0.35)   # log-bin resolution
+    assert h.percentile(0.5) <= h.percentile(0.99)
+
+
+def test_trace_source_exhaustion_raises():
+    trace = make_trace(jax.random.PRNGKey(0), TC)
+    src = TraceTaskSource(_b1(trace))
+    src.take(0, 30)
+    with pytest.raises(ValueError):
+        src.take(0, 3)
+
+
+# ------------------------------------------------------- policy adapters
+def test_policy_adapter_names():
+    from repro.traffic.policies import available_policies, make_policy
+    for name in ("random", "fifo", "greedy"):
+        policy, params = make_policy(name, ECFG)
+        assert params == {}
+    with pytest.raises(ValueError):
+        make_policy("oracle", ECFG)
+    assert "eat" in available_policies()
+
+
+def test_eat_adapter_streams():
+    from repro.core.agent import AgentConfig
+    from repro.traffic.policies import make_policy
+    ecfg = EnvConfig(num_servers=4, max_tasks=8, queue_window=4, max_steps=32)
+    tc = TraceConfig(num_tasks=8, arrival_rate=0.05, max_servers=4)
+    policy, params = make_policy("eat", ecfg,
+                                 acfg=AgentConfig(variant="eat-da", T=2))
+    src = ProcessTaskSource(PoissonArrivals(0.05), tc, jax.random.PRNGKey(6),
+                            num_streams=2)
+    s = run_stream(ecfg, policy, params, src, jax.random.PRNGKey(7),
+                   StreamConfig(num_windows=2, num_streams=2)).summary
+    assert s["tasks_injected"] == (s["tasks_scheduled"] + s["tasks_dropped"]
+                                   + s["tasks_leftover"])
+
+
+# ------------------------------------------------------- curriculum
+def test_training_curriculum_cells_share_ecfg():
+    from repro.core.scenarios import training_curriculum
+    cells = training_curriculum(ECFG)
+    assert len(cells) >= 4
+    assert all(sc.ecfg == ECFG for sc in cells)
+    names = [sc.name for sc in cells]
+    assert "coldstart" in names and "bursty" in names
+
+
+def test_sac_train_with_curriculum_smoke():
+    from repro.core import agent as AG
+    from repro.core import sac as SAC
+    from repro.core.scenarios import training_curriculum
+    ecfg = EnvConfig(num_servers=4, max_tasks=6, queue_window=4, max_steps=48)
+    cells = training_curriculum(ecfg)
+    # warmup high enough that no gradient update compiles (collect-only)
+    scfg = SAC.SACConfig(warmup_steps=100_000)
+    ts, hist = SAC.train(ecfg, AG.AgentConfig(variant="eat-da", T=2), scfg,
+                         None, num_episodes=4, seed=0, log_every=0,
+                         num_envs=2, curriculum=cells)
+    assert len(hist) == 4
+    assert all(np.isfinite(h["episode_return"]) for h in hist)
+
+
+def test_curriculum_rejects_mismatched_ecfg():
+    from repro.core.scenarios import curriculum_picker, training_curriculum
+    other = EnvConfig(num_servers=8, max_tasks=6, queue_window=4)
+    cells = training_curriculum(other)
+    with pytest.raises(ValueError):
+        curriculum_picker(ECFG, cells)
