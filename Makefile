@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-all bench-rollout bench-traffic traffic-sweep
+.PHONY: test test-all bench-rollout bench-traffic bench-env-step traffic-sweep
 
 test:            ## tier-1: fast suite (slow tests deselected by default)
 	$(PY) -m pytest -x -q
@@ -14,6 +14,9 @@ bench-rollout:   ## batched-rollout engine vs host-loop evaluator
 
 bench-traffic:   ## streaming traffic engine throughput -> BENCH_traffic.json
 	$(PY) benchmarks/bench_traffic.py
+
+bench-env-step:  ## fused vs unfused env decision step -> BENCH_env_step.json
+	$(PY) benchmarks/bench_env_step.py
 
 traffic-sweep:   ## >=100k-task streaming QoS sweep per policy
 	$(PY) examples/traffic_sweep.py

@@ -85,7 +85,7 @@ def bench(args):
     if args.json_out != "none":
         from common import write_bench_json
         write_bench_json(f"batch_rollout_{args.policy}", out,
-                         out=args.json_out or None)
+                         out=args.json_out or None, fused=None)
     return out
 
 

@@ -64,6 +64,9 @@ def main():
     ap.add_argument("--window-tasks", type=int, default=64)
     ap.add_argument("--windows", type=int, default=20)
     ap.add_argument("--policies", default="random,fifo,greedy")
+    ap.add_argument("--fused", type=int, default=1,
+                    help="1 = fused env-step engine (default), 0 = legacy "
+                         "path (bitwise-identical QoS, slower)")
     ap.add_argument("--json-out", default="",
                     help="BENCH json path ('' = repo-root default, "
                          "'none' = skip)")
@@ -73,7 +76,8 @@ def main():
     tcfg = TraceConfig(num_tasks=args.window_tasks,
                        arrival_rate=paper_rate_for(args.servers),
                        max_servers=args.servers)
-    scfg = StreamConfig(num_windows=args.windows, num_streams=args.streams)
+    scfg = StreamConfig(num_windows=args.windows, num_streams=args.streams,
+                        fused=bool(args.fused))
 
     rows = []
     for name in args.policies.split(","):
@@ -87,10 +91,16 @@ def main():
 
     payload = {"servers": args.servers, "streams": args.streams,
                "window_tasks": args.window_tasks, "windows": args.windows,
+               "comparability_note":
+                   "absolute tasks/s depend on machine load at record time "
+                   "and are NOT comparable across records; for engine "
+                   "comparisons use BENCH_env_step.json, which measures "
+                   "fused vs unfused side-by-side in one run",
                "policies": rows}
     print(json.dumps(payload, indent=1))
     if args.json_out != "none":
-        write_bench_json("traffic", payload, out=args.json_out or None)
+        write_bench_json("traffic", payload, out=args.json_out or None,
+                         fused=bool(args.fused))
 
 
 if __name__ == "__main__":

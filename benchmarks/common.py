@@ -32,15 +32,21 @@ SCHED_DIR = os.path.join(ART, "scheduling")
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def write_bench_json(name: str, payload: Dict, out: Optional[str] = None) -> str:
+def write_bench_json(name: str, payload: Dict, out: Optional[str] = None,
+                     fused: Optional[bool] = None) -> str:
     """Machine-readable perf record: BENCH_<name>.json at the repo root so
-    the numbers are tracked across PRs. Adds a timestamp and jax version."""
+    the numbers are tracked across PRs. Adds a timestamp, jax version and
+    the fused env-step flag (`fused=None` records the engine default), so
+    perf trajectories across PRs state which decision-step path produced
+    them."""
     path = out or os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     payload = dict(payload)
     payload.setdefault("bench", name)
     payload.setdefault("timestamp", time.strftime("%Y-%m-%dT%H:%M:%S"))
     payload.setdefault("jax_version", jax.__version__)
     payload.setdefault("backend", jax.default_backend())
+    # batch_rollout defaults to the fused engine; None = "ran on default"
+    payload.setdefault("env_step_fused", True if fused is None else bool(fused))
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     print(f"bench json -> {path}")

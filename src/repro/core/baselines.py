@@ -55,11 +55,17 @@ def greedy_act(ecfg: EV.EnvConfig, trace: Dict, state: EV.EnvState):
     (alpha_q q - lambda_q I) is the primary criterion and the full reward
     only breaks ties between equal-quality candidates (earlier task, less
     queue wait).
+
+    All candidates share one visible-queue view and are simulated with
+    `env.decision_step`, so the search costs a single top-k — the legacy
+    `env.step` recomputed the queue (and a discarded observation) per
+    candidate.
     """
     cands = _candidate_actions(ecfg)
+    qview = EV.visible_queue(ecfg, trace, state)
 
     def eval_a(a):
-        _, _, r, _, info = EV.step(ecfg, trace, state, a)
+        _, r, _, info = EV.decision_step(ecfg, trace, state, a, qview)
         q = info["quality"]
         pen = Q.quality_penalty(q, ecfg.q_min, ecfg.p_quality)
         qual = jnp.where(info["scheduled"],
@@ -74,20 +80,28 @@ def greedy_act(ecfg: EV.EnvConfig, trace: Dict, state: EV.EnvState):
 # sequence rollout for meta-heuristics
 @functools.partial(jax.jit, static_argnames=("ecfg",))
 def rollout_sequence(ecfg: EV.EnvConfig, trace: Dict, seq: jnp.ndarray):
-    """seq: (T, action_dim) in [0,1]. Returns (return, final_state)."""
+    """seq: (T, action_dim) in [0,1]. Returns (return, final_state).
+
+    Sequence replay needs no observations, so the scan threads the visible
+    queue through `env.decision_step`: one top-k per decision and no Eq.-6
+    matrix assembly (the legacy `env.step` computed both, twice over)."""
     state0 = EV.reset(ecfg)
+    q0 = EV.visible_queue(ecfg, trace, state0)
 
     def body(carry, a):
-        state, total, done = carry
-        new_state, _, r, d, _ = EV.step(ecfg, trace, state, a)
+        state, q, total, done = carry
+        new_state, r, d, _ = EV.decision_step(ecfg, trace, state, a, q)
+        nq = EV.visible_queue(ecfg, trace, new_state)
         # freeze once done
         state = jax.tree_util.tree_map(
             lambda n, o: jnp.where(done, o, n), new_state, state)
+        nq = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(done, o, n), nq, q)
         total = total + jnp.where(done, 0.0, r)
-        return (state, total, done | d), None
+        return (state, nq, total, done | d), None
 
-    (state, total, _), _ = jax.lax.scan(
-        body, (state0, jnp.zeros(()), jnp.zeros((), bool)), seq)
+    (state, _, total, _), _ = jax.lax.scan(
+        body, (state0, q0, jnp.zeros(()), jnp.zeros((), bool)), seq)
     return total, state
 
 
@@ -102,6 +116,30 @@ class GeneticConfig:
     seq_len: int = 2048
 
 
+@functools.partial(jax.jit, static_argnames=("ecfg", "gcfg"))
+def _genetic_generation(ecfg: EV.EnvConfig, gcfg: GeneticConfig, trace: Dict,
+                        pop: jnp.ndarray, key):
+    """One fully-jitted generation: vmapped fitness, selection, crossover,
+    mutation. The host loop used to dispatch each of these as separate ops
+    per generation; now one compiled program per generation (same RNG
+    stream and op order as the host version, so results are unchanged)."""
+    T, A = pop.shape[1], pop.shape[2]
+    fit = jax.vmap(lambda s: rollout_sequence(ecfg, trace, s)[0])(pop)
+    order = jnp.argsort(-fit)
+    pop = pop[order]
+    parents = pop[: gcfg.parents]
+    key, kc, kp1, kp2, km, kmv = jax.random.split(key, 6)
+    n_child = gcfg.population - gcfg.elites
+    i1 = jax.random.randint(kp1, (n_child,), 0, gcfg.parents)
+    i2 = jax.random.randint(kp2, (n_child,), 0, gcfg.parents)
+    xmask = jax.random.bernoulli(kc, 0.5, (n_child, T, A))
+    children = jnp.where(xmask, parents[i1], parents[i2])
+    mmask = jax.random.bernoulli(km, gcfg.mutation_prob, (n_child, T, A))
+    children = jnp.where(mmask, jax.random.uniform(kmv, (n_child, T, A)),
+                         children)
+    return jnp.concatenate([pop[: gcfg.elites], children]), key
+
+
 def genetic_schedule(key, ecfg: EV.EnvConfig, trace: Dict,
                      gcfg: GeneticConfig = GeneticConfig()):
     """Returns (best action sequence, best fitness)."""
@@ -112,21 +150,7 @@ def genetic_schedule(key, ecfg: EV.EnvConfig, trace: Dict,
     pop = jax.random.uniform(k0, (gcfg.population, T, A))
 
     for _gen in range(gcfg.generations):
-        fit = rollout(pop)
-        order = jnp.argsort(-fit)
-        pop = pop[order]
-        fit = fit[order]
-        parents = pop[: gcfg.parents]
-        key, kc, kp1, kp2, km, kmv = jax.random.split(key, 5 + 1)[:6]
-        n_child = gcfg.population - gcfg.elites
-        i1 = jax.random.randint(kp1, (n_child,), 0, gcfg.parents)
-        i2 = jax.random.randint(kp2, (n_child,), 0, gcfg.parents)
-        xmask = jax.random.bernoulli(kc, 0.5, (n_child, T, A))
-        children = jnp.where(xmask, parents[i1], parents[i2])
-        mmask = jax.random.bernoulli(km, gcfg.mutation_prob, (n_child, T, A))
-        children = jnp.where(mmask, jax.random.uniform(kmv, (n_child, T, A)),
-                             children)
-        pop = jnp.concatenate([pop[: gcfg.elites], children])
+        pop, key = _genetic_generation(ecfg, gcfg, trace, pop, key)
     fit = rollout(pop)
     best = jnp.argmax(fit)
     return pop[best], fit[best]
@@ -135,40 +159,74 @@ def genetic_schedule(key, ecfg: EV.EnvConfig, trace: Dict,
 @dataclass(frozen=True)
 class HarmonyConfig:
     memory_size: int = 64
-    improvisations: int = 64
+    improvisations: int = 64     # total candidates (across batched rounds)
+    improv_batch: int = 16       # candidates improvised/evaluated per round
     hmcr: float = 0.8            # memory consideration
     par: float = 0.2             # pitch adjustment
     bandwidth: float = 0.05      # continuous-action pitch bandwidth
     seq_len: int = 2048
 
 
+def _harmony_improvise(key, memory, hcfg: HarmonyConfig, T: int, A: int):
+    """One candidate from the current memory (classic HS improvisation)."""
+    km, kr, kp, kb, kn = jax.random.split(key, 5)
+    pick = jax.random.randint(km, (T, A), 0, hcfg.memory_size)
+    from_mem = memory[pick, jnp.arange(T)[:, None], jnp.arange(A)[None, :]]
+    use_mem = jax.random.bernoulli(kr, hcfg.hmcr, (T, A))
+    rand = jax.random.uniform(kn, (T, A))
+    new = jnp.where(use_mem, from_mem, rand)
+    adj = jax.random.bernoulli(kp, hcfg.par, (T, A))
+    return jnp.where(adj & use_mem,
+                     jnp.clip(new + hcfg.bandwidth *
+                              jax.random.uniform(kb, (T, A), minval=-1.0,
+                                                 maxval=1.0), 0, 1),
+                     new)
+
+
+@jax.jit
+def _harmony_merge(memory, fit, new, f_new):
+    """Fold a batch of evaluated candidates into (memory, fit) one at a
+    time — each replaces the then-worst entry iff it improves it, exactly
+    like the sequential algorithm applied to a round's snapshot."""
+    def body(carry, x):
+        mem, ft = carry
+        cand, fc = x
+        worst = jnp.argmin(ft)
+        better = fc > ft[worst]
+        mem = mem.at[worst].set(jnp.where(better, cand, mem[worst]))
+        ft = ft.at[worst].set(jnp.where(better, fc, ft[worst]))
+        return (mem, ft), None
+    (memory, fit), _ = jax.lax.scan(body, (memory, fit), (new, f_new))
+    return memory, fit
+
+
 def harmony_schedule(key, ecfg: EV.EnvConfig, trace: Dict,
                      hcfg: HarmonyConfig = HarmonyConfig()):
+    """Batched harmony search: each round improvises `improv_batch`
+    candidates from the current memory with one vmapped generator, scores
+    them with one vmapped sequence rollout (the way PR 1 batched baseline
+    evaluation), and merges them sequentially. The host loop used to
+    improvise and evaluate one candidate per step."""
     A = ecfg.action_dim
     T = hcfg.seq_len
+    nb = max(1, min(hcfg.improv_batch, hcfg.improvisations))
+    rounds = -(-hcfg.improvisations // nb)
     rollout = jax.vmap(lambda s: rollout_sequence(ecfg, trace, s)[0])
     key, k0 = jax.random.split(key)
     memory = jax.random.uniform(k0, (hcfg.memory_size, T, A))
     fit = rollout(memory)
 
-    for _ in range(hcfg.improvisations):
-        key, km, kr, kp, kb, kn = jax.random.split(key, 6)
-        pick = jax.random.randint(km, (T, A), 0, hcfg.memory_size)
-        from_mem = memory[pick, jnp.arange(T)[:, None], jnp.arange(A)[None, :]]
-        use_mem = jax.random.bernoulli(kr, hcfg.hmcr, (T, A))
-        rand = jax.random.uniform(kn, (T, A))
-        new = jnp.where(use_mem, from_mem, rand)
-        adj = jax.random.bernoulli(kp, hcfg.par, (T, A))
-        new = jnp.where(adj & use_mem,
-                        jnp.clip(new + hcfg.bandwidth *
-                                 jax.random.uniform(kb, (T, A), minval=-1.0,
-                                                    maxval=1.0), 0, 1),
-                        new)
-        f_new = rollout_sequence(ecfg, trace, new)[0]
-        worst = jnp.argmin(fit)
-        better = f_new > fit[worst]
-        memory = memory.at[worst].set(jnp.where(better, new, memory[worst]))
-        fit = fit.at[worst].set(jnp.where(better, f_new, fit[worst]))
+    improvise = jax.vmap(
+        lambda k, mem: _harmony_improvise(k, mem, hcfg, T, A),
+        in_axes=(0, None))
+    remaining = hcfg.improvisations
+    for _ in range(rounds):
+        nb_r = min(nb, remaining)           # trim the last round so the
+        remaining -= nb_r                   # total stays `improvisations`
+        key, kb = jax.random.split(key)
+        new = improvise(jax.random.split(kb, nb_r), memory)
+        f_new = rollout(new)
+        memory, fit = _harmony_merge(memory, fit, new, f_new)
     best = jnp.argmax(fit)
     return memory[best], fit[best]
 

@@ -37,6 +37,19 @@ from repro.core import timemodel as TM
 INF = jnp.float32(1e30)
 
 
+def _pin(x):
+    """Value-preserving min that pins a product before an add/sub.
+
+    LLVM may contract `a * b + c` into an FMA in one compilation context
+    (one fusion shape) and not another; the decision math runs in several —
+    the host loop, the vmapped episodic scan, the fused batched step and
+    its Pallas kernel — and they must all round identically for episode
+    metrics to stay bitwise-comparable. Every pinned value is far below
+    1e30, so the min only breaks the mul->add pattern, never the value.
+    """
+    return jnp.minimum(x, 1e30)
+
+
 @dataclass(frozen=True)
 class EnvConfig:
     num_servers: int = 8
@@ -112,33 +125,53 @@ def reset(cfg: EnvConfig) -> EnvState:
 
 
 # ----------------------------------------------------------------------
-def _visible_queue(cfg: EnvConfig, trace: Dict, state: EnvState):
+class QueueView(NamedTuple):
+    """One per-decision visible-queue top-k, threaded through the rollout so
+    each decision computes it once (step + next observation share it)."""
+    idx: jnp.ndarray     # (l,) i32 task ids, arrival order
+    valid: jnp.ndarray   # (l,) bool slot holds a queued task
+    queued: jnp.ndarray  # (K,) bool arrived & unscheduled
+
+
+def visible_queue(cfg: EnvConfig, trace: Dict, state: EnvState) -> QueueView:
     """Indices of the l earliest queued (arrived & unscheduled) tasks."""
     queued = (state.task_status == 0) & (trace["arr_time"] <= state.time)
     prio = jnp.where(queued, trace["arr_time"], INF)
     neg, idx = jax.lax.top_k(-prio, cfg.queue_window)
     valid = -neg < INF
-    return idx, valid, queued
+    return QueueView(idx=idx, valid=valid, queued=queued)
 
 
-def observe(cfg: EnvConfig, trace: Dict, state: EnvState) -> jnp.ndarray:
-    """Eq.-6 state matrix, normalised."""
+def observe_from(cfg: EnvConfig, trace: Dict, state: EnvState,
+                 q: QueueView) -> jnp.ndarray:
+    """Eq.-6 state matrix from an already-computed queue view.
+
+    Scaling uses reciprocal multiplies, not divisions: LLVM rewrites
+    division by a constant into multiply-by-reciprocal per fusion context,
+    which would put the episodic and fused engines 1 ulp apart."""
     t = state.time
-    idx, valid, _ = _visible_queue(cfg, trace, state)
+    idx, valid = q.idx, q.valid
+    inv_ts = 1.0 / cfg.time_scale
+    inv_nm = 1.0 / max(cfg.num_models, 1)
     avail = (state.server_free_at <= t).astype(jnp.float32)
-    remaining = jnp.maximum(state.server_free_at - t, 0.0) / cfg.time_scale
-    model = (state.server_model.astype(jnp.float32) + 1.0) / max(cfg.num_models, 1)
-    wait = jnp.where(valid, (t - trace["arr_time"][idx]) / cfg.time_scale, 0.0)
+    remaining = jnp.maximum(state.server_free_at - t, 0.0) * inv_ts
+    model = (state.server_model.astype(jnp.float32) + 1.0) * inv_nm
+    wait = jnp.where(valid, (t - trace["arr_time"][idx]) * inv_ts, 0.0)
     c = jnp.where(valid, trace["c"][idx].astype(jnp.float32) / 8.0, 0.0)
     if cfg.num_models > 1:
         mrow = jnp.where(valid, (trace["model"][idx].astype(jnp.float32) + 1.0)
-                         / cfg.num_models, 0.0)
+                         * inv_nm, 0.0)
     else:
         mrow = jnp.zeros_like(c)   # paper zero-pads this row
     row0 = jnp.concatenate([avail, wait])
     row1 = jnp.concatenate([remaining, c])
     row2 = jnp.concatenate([model, mrow])
     return jnp.stack([row0, row1, row2])
+
+
+def observe(cfg: EnvConfig, trace: Dict, state: EnvState) -> jnp.ndarray:
+    """Eq.-6 state matrix, normalised."""
+    return observe_from(cfg, trace, state, visible_queue(cfg, trace, state))
 
 
 # ----------------------------------------------------------------------
@@ -182,15 +215,24 @@ def _select_servers(cfg: EnvConfig, state: EnvState, idle, m_k, c_k):
     return sel, any_reuse
 
 
-def step(cfg: EnvConfig, trace: Dict, state: EnvState, action: jnp.ndarray):
-    """One decision. Returns (state', obs', reward, done, info)."""
+def decision_step(cfg: EnvConfig, trace: Dict, state: EnvState,
+                  action: jnp.ndarray, q: QueueView):
+    """The per-decision state transition as a fixed-shape pure function.
+
+    `q` must be `visible_queue(cfg, trace, state)`; a view computed on the
+    previous decision's post-step state is exact, because the lazy
+    retirement below only flips task status 1 -> 2 (the queued mask tests
+    status == 0) and time does not move between decisions. Returns
+    (state', reward, done, info) — the caller owns the next observation, so
+    one decision costs exactly one visible-queue top-k.
+    """
     t = state.time
     # lazily retire finished tasks
     finished = (state.task_status == 1) & (state.task_finish <= t)
     status = jnp.where(finished, 2, state.task_status)
     state = state._replace(task_status=status)
 
-    idx, valid, queued = _visible_queue(cfg, trace, state)
+    idx, valid, queued = q.idx, q.valid, q.queued
     scores = jnp.where(valid, action[2:], -INF)
     slot = jnp.argmax(scores)
     k = idx[slot]
@@ -205,10 +247,10 @@ def step(cfg: EnvConfig, trace: Dict, state: EnvState, action: jnp.ndarray):
     feasible = want_exec & k_valid & (n_idle >= c_k)
 
     sel, reuse = _select_servers(cfg, state, idle, m_k, c_k)
-    steps = jnp.round(cfg.s_min + jnp.clip(action[1], 0.0, 1.0)
-                      * (cfg.s_max - cfg.s_min)).astype(jnp.int32)
-    t_exec = TM.exec_time(c_k, steps, scale)
-    t_init = jnp.where(reuse, 0.0, TM.init_time(c_k, scale))
+    steps = jnp.round(cfg.s_min + _pin(jnp.clip(action[1], 0.0, 1.0)
+                      * (cfg.s_max - cfg.s_min))).astype(jnp.int32)
+    t_exec = _pin(TM.exec_time(c_k, steps, scale))
+    t_init = _pin(jnp.where(reuse, 0.0, TM.init_time(c_k, scale)))
     finish = t + t_exec + t_init
     q_k = Q.quality_of(steps, trace["noise"][k])
     pen = Q.quality_penalty(q_k, cfg.q_min, cfg.p_quality)
@@ -236,8 +278,9 @@ def step(cfg: EnvConfig, trace: Dict, state: EnvState, action: jnp.ndarray):
     still_queued = queued & (jnp.arange(cfg.max_tasks) != k)
     n_q = jnp.maximum(jnp.sum(still_queued.astype(jnp.float32)), 1.0)
     t_avg = jnp.sum(jnp.where(still_queued, t - trace["arr_time"], 0.0)) / n_q
-    r = cfg.alpha_q * q_k - cfg.lambda_q * pen \
-        + cfg.k_time / (cfg.beta_t * t_resp + cfg.mu_t * t_avg + 1e-3)
+    r = _pin(cfg.alpha_q * q_k) - _pin(cfg.lambda_q * pen) \
+        + cfg.k_time / (_pin(cfg.beta_t * t_resp) + _pin(cfg.mu_t * t_avg)
+                        + 1e-3)
     reward = jnp.where(f, r, 0.0)
 
     # --- advance time on no-op ----------------------------------------
@@ -260,7 +303,51 @@ def step(cfg: EnvConfig, trace: Dict, state: EnvState, action: jnp.ndarray):
     info = {"scheduled": f, "task": k, "reuse": reuse & f, "steps": steps,
             "quality": jnp.where(f, q_k, 0.0),
             "response": jnp.where(f, t_resp, 0.0)}
+    return new_state, reward, done, info
+
+
+def step(cfg: EnvConfig, trace: Dict, state: EnvState, action: jnp.ndarray):
+    """One decision. Returns (state', obs', reward, done, info)."""
+    q = visible_queue(cfg, trace, state)
+    new_state, reward, done, info = decision_step(cfg, trace, state, action, q)
     return new_state, observe(cfg, trace, new_state), reward, done, info
+
+
+def step_with_queue(cfg: EnvConfig, trace: Dict, state: EnvState,
+                    q: QueueView, action: jnp.ndarray):
+    """`step` with the visible queue threaded through: consumes the view of
+    the current state and returns the next one alongside the observation, so
+    a rollout does one top-k per decision instead of two (the legacy `step`
+    recomputed it inside `observe`). Bitwise-identical to `step`.
+    Returns (state', queue', obs', reward, done, info)."""
+    new_state, reward, done, info = decision_step(cfg, trace, state, action, q)
+    q2 = visible_queue(cfg, trace, new_state)
+    obs2 = observe_from(cfg, trace, new_state, q2)
+    return new_state, q2, obs2, reward, done, info
+
+
+def reset_view(cfg: EnvConfig, trace: Dict, state: EnvState):
+    """(queue, obs) of a (possibly carried) state — the rollout's carry seed."""
+    q = visible_queue(cfg, trace, state)
+    return q, observe_from(cfg, trace, state, q)
+
+
+# ----------------------------------------------------------------------
+def decision_statics(cfg: EnvConfig, trace: Dict) -> Dict[str, jnp.ndarray]:
+    """Per-task constants of the decision step, hoisted out of the rollout
+    scan (the fused kernel and its jnp reference consume these instead of
+    re-deriving latency-table lookups every decision). All (K,) arrays."""
+    c = trace["c"]
+    scale = cfg.scales()[trace["model"]]
+    return {
+        "arr_time": trace["arr_time"],
+        "c": c,
+        "model": trace["model"],
+        "noise": trace["noise"],
+        "step_base": TM.STEP_TIME[TM._log2i(c)],   # s / inference step
+        "init_base": TM.INIT_TIME[TM._log2i(c)],   # model (re)load s
+        "scale": scale,
+    }
 
 
 # ----------------------------------------------------------------------

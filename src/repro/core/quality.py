@@ -17,7 +17,15 @@ TAU = 10.0
 
 def quality_of(steps, noise=0.0):
     s = jnp.asarray(steps, jnp.float32)
-    return Q_MAX * (1.0 - jnp.exp(-s / TAU)) + noise
+    # Two guards keep this bitwise-stable across every engine that computes
+    # it (host loop, vmapped episodic scan, fused batched env step, Pallas
+    # kernel): the reciprocal multiply replaces `s / TAU` — LLVM rewrites
+    # division by a constant into multiply-by-reciprocal in some fusion
+    # contexts and not others — and the value-preserving min (quality is
+    # far below 1e30) pins the product so `Q_MAX * (...) + noise` cannot be
+    # contracted into an FMA in one program and left split in another.
+    return jnp.minimum(Q_MAX * (1.0 - jnp.exp(-s * (1.0 / TAU))), 1e30) \
+        + noise
 
 
 def quality_penalty(q, q_min: float, p_quality: float):

@@ -23,6 +23,14 @@ Parity with the host loop: the scan splits the carried key exactly like the
 host-side evaluators (`key, k_act = split(key)` per decision step) and
 freezes the state once `done`, so a batched episode reproduces the host-loop
 episode bit-for-bit on the same (trace, policy, key).
+
+Fused engine (`fused=True`, the default): instead of vmapping per-episode
+scans, one `lax.scan` over decision steps advances all B envs per step
+through the fused decision op (`kernels/env_step`): a single Pallas kernel
+launch per decision on gpu/tpu, the op-minimized jnp reference on CPU.
+Bitwise-identical to the unfused path — same key splits, same freeze
+semantics, same float expressions — just one queue top-k per decision and
+no `argsort`/scatter ops in the hot loop.
 """
 from __future__ import annotations
 
@@ -33,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import env as EV
+from repro.kernels.env_step import ops as EK
 
 Policy = Callable[..., Any]
 
@@ -67,16 +76,22 @@ def rollout_episode(ecfg: EV.EnvConfig, trace: Dict, policy: Policy, params,
     """
     T = int(num_steps) if num_steps else ecfg.max_steps
     state0 = EV.reset(ecfg) if init_state is None else init_state
-    obs0 = EV.observe(ecfg, trace, state0)
+    q0, obs0 = EV.reset_view(ecfg, trace, state0)
 
     def body(carry, _):
-        state, obs, k, done, total, length = carry
+        state, q, obs, k, done, total, length = carry
         k, k_act = jax.random.split(k)
         action, extras = policy(params, k_act, trace, state, obs)
-        nstate, nobs, r, d, _ = EV.step(ecfg, trace, state, action)
+        # queue threading: the step consumes this decision's queue view and
+        # hands back the next one, so one decision = one top-k (the legacy
+        # step + observe pair did two)
+        nstate, nq, nobs, r, d, _ = EV.step_with_queue(
+            ecfg, trace, state, q, action)
         # freeze the episode once done so trailing scan steps are no-ops
         nstate = jax.tree_util.tree_map(
             lambda n, o: jnp.where(done, o, n), nstate, state)
+        nq = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(done, o, n), nq, q)
         nobs = jnp.where(done, obs, nobs)
         r = jnp.where(done, 0.0, r)
         valid = ~done
@@ -84,13 +99,13 @@ def rollout_episode(ecfg: EV.EnvConfig, trace: Dict, policy: Policy, params,
                            done=d.astype(jnp.float32), valid=valid,
                            extras=extras)
                if collect else None)
-        carry = (nstate, nobs, k, done | d, total + r,
+        carry = (nstate, nq, nobs, k, done | d, total + r,
                  length + valid.astype(jnp.int32))
         return carry, out
 
-    carry0 = (state0, obs0, key, jnp.zeros((), bool),
+    carry0 = (state0, q0, obs0, key, jnp.zeros((), bool),
               jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32))
-    (state, _, _, _, total, length), traj = jax.lax.scan(
+    (state, _, _, _, _, total, length), traj = jax.lax.scan(
         body, carry0, None, length=T)
     metrics = dict(EV.episode_metrics(ecfg, trace, state))
     metrics["episode_return"] = total
@@ -99,12 +114,75 @@ def rollout_episode(ecfg: EV.EnvConfig, trace: Dict, policy: Policy, params,
                          transitions=traj if collect else None)
 
 
+def _bcast(flag, like):
+    """Broadcast a (B,) flag against a (B, ...) leaf."""
+    return flag.reshape(flag.shape + (1,) * (like.ndim - flag.ndim))
+
+
+def _batch_reset(ecfg: EV.EnvConfig, B: int) -> EV.EnvState:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (B,) + x.shape), EV.reset(ecfg))
+
+
+def _batch_rollout_fused(ecfg: EV.EnvConfig, traces: Dict, policy: Policy,
+                         params, keys, *, num_steps, collect, init_state,
+                         impl) -> RolloutResult:
+    """Scan over decision steps; each step advances all B envs through one
+    fused decision op (`kernels.env_step.ops.env_step_fused`). Bitwise-equal
+    to `vmap(rollout_episode)` — the per-env op sequence is identical."""
+    T = int(num_steps) if num_steps else ecfg.max_steps
+    B = keys.shape[0]
+    state0 = _batch_reset(ecfg, B) if init_state is None else init_state
+    statics = jax.vmap(lambda tr: EV.decision_statics(ecfg, tr))(traces)
+    q0, obs0 = jax.vmap(
+        lambda tr, st: EV.reset_view(ecfg, tr, st))(traces, state0)
+    vpolicy = jax.vmap(policy, in_axes=(None, 0, 0, 0, 0))
+
+    def body(carry, _):
+        state, q, obs, ks, done, total, length = carry
+        splits = jax.vmap(jax.random.split)(ks)          # (B, 2, 2)
+        ks_next, k_act = splits[:, 0], splits[:, 1]
+        action, extras = vpolicy(params, k_act, traces, state, obs)
+        nstate, nq, nobs, r, d = EK.env_step_fused(
+            ecfg, statics, state, action, q, impl=impl)
+        nstate = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(_bcast(done, n), o, n), nstate, state)
+        nq = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(_bcast(done, n), o, n), nq, q)
+        nobs = jnp.where(_bcast(done, nobs), obs, nobs)
+        r = jnp.where(done, 0.0, r)
+        valid = ~done
+        out = (Transitions(obs=obs, action=action, reward=r, next_obs=nobs,
+                           done=d.astype(jnp.float32), valid=valid,
+                           extras=extras)
+               if collect else None)
+        carry = (nstate, nq, nobs, ks_next, done | d, total + r,
+                 length + valid.astype(jnp.int32))
+        return carry, out
+
+    carry0 = (state0, q0, obs0, keys, jnp.zeros((B,), bool),
+              jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.int32))
+    (state, _, _, _, _, total, length), traj = jax.lax.scan(
+        body, carry0, None, length=T)
+    metrics = dict(jax.vmap(
+        lambda tr, st: EV.episode_metrics(ecfg, tr, st))(traces, state))
+    metrics["episode_return"] = total
+    metrics["episode_len"] = length
+    if collect:   # scan stacks (T, B, ...) -> match the unfused (B, T, ...)
+        traj = jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1), traj)
+    return RolloutResult(metrics=metrics, final_state=state,
+                         transitions=traj if collect else None)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("ecfg", "policy", "num_steps", "collect"))
+                   static_argnames=("ecfg", "policy", "num_steps", "collect",
+                                    "fused", "fused_impl"))
 def batch_rollout(ecfg: EV.EnvConfig, traces: Dict, policy: Policy, params,
                   keys, *, num_steps: Optional[int] = None,
                   collect: bool = False,
-                  init_state: Optional[EV.EnvState] = None) -> RolloutResult:
+                  init_state: Optional[EV.EnvState] = None,
+                  fused: bool = True,
+                  fused_impl: str = "auto") -> RolloutResult:
     """B episodes in one jitted program.
 
     `traces`: trace dict with a leading (B,) batch axis (see
@@ -113,7 +191,17 @@ def batch_rollout(ecfg: EV.EnvConfig, traces: Dict, policy: Policy, params,
     when given, is an `EnvState` whose leaves carry the same (B, ...) batch
     axis — each episode resumes from its own carried state. Returns a
     `RolloutResult` whose leaves all carry the (B, ...) batch axis.
+
+    `fused=True` (default) advances all B envs per decision through the
+    fused env-step op — one Pallas kernel launch per decision on gpu/tpu
+    (`fused_impl="auto"`), the fused jnp reference on CPU. `fused=False` is
+    the legacy vmap-of-scans engine on the compositional `env.step` path.
+    Both produce bitwise-identical results on the same inputs.
     """
+    if fused:
+        return _batch_rollout_fused(ecfg, traces, policy, params, keys,
+                                    num_steps=num_steps, collect=collect,
+                                    init_state=init_state, impl=fused_impl)
     if init_state is None:
         def one(trace, key):
             return rollout_episode(ecfg, trace, policy, params, key,

@@ -1,0 +1,151 @@
+"""Pure-jnp oracle for the fused environment decision step.
+
+One call advances one env by one scheduling decision and also produces the
+next visible-queue view and observation, so a rollout costs exactly one
+queue pass per decision. The math mirrors ``env.decision_step`` +
+``env.visible_queue`` + ``env.observe_from`` bit-for-bit, but restructured
+the way the Pallas kernel computes it:
+
+* the visible-queue top-k is a counting/rank pass (`lax.top_k` is stable —
+  ties broken by lowest index — which the strict (prio, index) order below
+  reproduces exactly);
+* fragmentation-aware server selection ranks idle servers by counting
+  strictly-smaller scores instead of a full `argsort` (idle scores are
+  unique thanks to the 0.001*arange tie-breaker, busy servers sit at INF and
+  are masked out, so the counting rank equals the argsort rank wherever it
+  is consumed);
+* task-array updates are one-hot `where` masks instead of scatters;
+* latency-table lookups come from per-task ``env.decision_statics`` hoisted
+  out of the rollout scan (same multiplication order as
+  ``timemodel.exec_time`` / ``init_time``, so floats are bitwise equal).
+
+Batch with `jax.vmap` (``ops.env_step_fused`` does) — everything here is
+fixed-shape jnp on one env.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.core import env as EV
+from repro.core import quality as Q
+
+INF = EV.INF
+
+
+def env_step_ref(cfg: EV.EnvConfig, statics: Dict, state: EV.EnvState,
+                 action: jnp.ndarray, q: EV.QueueView):
+    """Fused decision: (state', queue', obs', reward, done) for one env."""
+    E, K, l = cfg.num_servers, cfg.max_tasks, cfg.queue_window
+    arr = statics["arr_time"]
+    t = state.time
+
+    # lazily retire finished tasks
+    finished = (state.task_status == 1) & (state.task_finish <= t)
+    status = jnp.where(finished, 2, state.task_status)
+
+    idx, valid, queued = q.idx, q.valid, q.queued
+    scores = jnp.where(valid, action[2:], -INF)
+    slot = jnp.argmax(scores)
+    k = idx[slot]
+    k_valid = valid[slot]
+
+    want_exec = action[0] <= 0.5
+    c_k = statics["c"][k]
+    m_k = statics["model"][k]
+    scale_k = statics["scale"][k]
+    idle = state.server_free_at <= t
+    n_idle = jnp.sum(idle.astype(jnp.int32))
+    feasible = want_exec & k_valid & (n_idle >= c_k)
+
+    # --- server selection: reuse detection + counting-rank fresh pick -----
+    gang = state.server_gang
+    has_gang = gang >= 0
+    same = gang[:, None] == gang[None, :]
+    ok = idle & has_gang & (state.server_model == m_k) \
+        & (state.server_gang_size == c_k)
+    counts = jnp.sum(same & ok[None, :], axis=1)
+    complete = ok & (counts == c_k)
+    reuse = jnp.any(complete)
+    g_star = jnp.min(jnp.where(complete, gang, jnp.int32(2 ** 30)))
+    reuse_sel = ok & (gang == g_star)
+
+    member_ok = idle & has_gang
+    counts_all = jnp.sum(same & member_ok[None, :], axis=1)
+    intact = member_ok & (counts_all == state.server_gang_size) \
+        & (state.server_gang_size > 0)
+    score = jnp.where(idle,
+                      intact.astype(jnp.float32) * (100.0 + 10.0 * state.server_gang_size)
+                      + 0.001 * jnp.arange(E),
+                      INF)
+    rank = jnp.sum(score[None, :] < score[:, None], axis=1).astype(jnp.int32)
+    fresh_sel = idle & (rank < c_k)
+    sel = jnp.where(reuse, reuse_sel, fresh_sel)
+
+    # --- timing / quality of the candidate decision -----------------------
+    # env._pin keeps mul->add chains FMA-proof, exactly as in decision_step
+    _pin = EV._pin
+    steps = jnp.round(cfg.s_min + _pin(jnp.clip(action[1], 0.0, 1.0)
+                      * (cfg.s_max - cfg.s_min))).astype(jnp.int32)
+    steps_f = steps.astype(jnp.float32)
+    t_exec = _pin(statics["step_base"][k] * steps_f * scale_k)
+    t_init = _pin(jnp.where(reuse, 0.0, statics["init_base"][k] * scale_k))
+    finish = t + t_exec + t_init
+    q_k = Q.quality_of(steps, statics["noise"][k])
+    pen = Q.quality_penalty(q_k, cfg.q_min, cfg.p_quality)
+    t_resp = finish - arr[k]
+
+    # --- apply schedule (masked; one-hot instead of scatter) --------------
+    f = feasible
+    sel_f = sel & f
+    new_free = jnp.where(sel_f, finish, state.server_free_at)
+    new_model = jnp.where(sel_f, m_k, state.server_model)
+    new_gang = jnp.where(sel_f, k.astype(jnp.int32), state.server_gang)
+    new_gsize = jnp.where(sel_f, c_k, state.server_gang_size)
+
+    iota = jnp.arange(K)
+    hit = (iota == k) & f
+    status2 = jnp.where(hit, 1, status)
+    start2 = jnp.where(hit, t, state.task_start)
+    tfin2 = jnp.where(hit, finish, state.task_finish)
+    tsteps2 = jnp.where(hit, steps, state.task_steps)
+    tq2 = jnp.where(hit, q_k, state.task_quality)
+    trl2 = jnp.where(hit, jnp.where(reuse, 0, 1).astype(jnp.int32),
+                     state.task_reload)
+
+    # reward (only on successful schedule)
+    still_queued = queued & (iota != k)
+    n_q = jnp.maximum(jnp.sum(still_queued.astype(jnp.float32)), 1.0)
+    t_avg = jnp.sum(jnp.where(still_queued, t - arr, 0.0)) / n_q
+    r = _pin(cfg.alpha_q * q_k) - _pin(cfg.lambda_q * pen) \
+        + cfg.k_time / (_pin(cfg.beta_t * t_resp) + _pin(cfg.mu_t * t_avg)
+                        + 1e-3)
+    reward = jnp.where(f, r, 0.0)
+
+    # --- advance time on no-op --------------------------------------------
+    next_arrival = jnp.min(jnp.where(arr > t, arr, INF))
+    next_completion = jnp.min(jnp.where(new_free > t, new_free, INF))
+    next_event = jnp.minimum(next_arrival, next_completion)
+    t_new = jnp.where(f, t, jnp.where(next_event < INF, next_event, t + 1.0))
+
+    steps_taken = state.steps_taken + 1
+    new_state = EV.EnvState(
+        time=t_new, server_free_at=new_free, server_model=new_model,
+        server_gang=new_gang, server_gang_size=new_gsize,
+        task_status=status2, task_start=start2, task_finish=tfin2,
+        task_steps=tsteps2, task_quality=tq2, task_reload=trl2,
+        steps_taken=steps_taken,
+    )
+    all_done = jnp.all((status2 == 2) | ((status2 == 1) & (tfin2 <= t_new)))
+    done = all_done | (t_new >= cfg.time_limit) | (steps_taken >= cfg.max_steps)
+
+    # --- next visible queue + Eq.-6 observation ---------------------------
+    # `decision_statics` keeps the trace columns (`arr_time`/`c`/`model`),
+    # so the env's own queue/observation helpers apply directly: the jnp
+    # reference keeps `lax.top_k` (O(K log K), bitwise-stable ties by
+    # index), while the Pallas kernel — where no top_k primitive exists —
+    # reproduces it with its counting/rank pass.
+    q2 = EV.visible_queue(cfg, statics, new_state)
+    obs = EV.observe_from(cfg, statics, new_state, q2)
+    return new_state, q2, obs, reward, done

@@ -47,6 +47,8 @@ class StreamConfig:
     max_carry: Optional[int] = None         # leftover slots kept; default K//2
     resp_sla: float = 120.0                 # QoS latency budget (seconds)
     chunk_size: int = 0                     # arrival buffer refill; 0 = 4K
+    fused: bool = True                      # fused env-step engine (bitwise
+    #                                         identical; False = legacy path)
 
 
 # ----------------------------------------------------------------------
@@ -245,7 +247,8 @@ def run_stream(ecfg: EV.EnvConfig, policy, params, source, key,
         traces = {c: jnp.asarray(v) for c, v in cols.items()}
         keys = jax.random.split(jax.random.fold_in(key, w), B)
         res = RO.batch_rollout(ecfg, traces, policy, params, keys,
-                               num_steps=T, init_state=carry)
+                               num_steps=T, init_state=carry,
+                               fused=scfg.fused)
         stats, carry, lcols, n_left = _window_seam(ecfg, traces,
                                                    res.final_state, edges, sla)
         n_left = np.asarray(n_left)
