@@ -1,7 +1,10 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-all bench-rollout bench-traffic bench-env-step traffic-sweep
+.PHONY: test test-all test-sharded bench-rollout bench-traffic bench-env-step bench-sharded-rollout traffic-sweep
+
+test-sharded:    ## api backend parity under 8 forced host devices
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 $(PY) -m pytest tests/test_api.py -q
 
 test:            ## tier-1: fast suite (slow tests deselected by default)
 	$(PY) -m pytest -x -q
@@ -17,6 +20,9 @@ bench-traffic:   ## streaming traffic engine throughput -> BENCH_traffic.json
 
 bench-env-step:  ## fused vs unfused env decision step -> BENCH_env_step.json
 	$(PY) benchmarks/bench_env_step.py
+
+bench-sharded-rollout:  ## sharded vs fused backend eps/s -> BENCH_sharded_rollout.json
+	$(PY) benchmarks/bench_batch_rollout.py --sharded --devices 8
 
 traffic-sweep:   ## >=100k-task streaming QoS sweep per policy
 	$(PY) examples/traffic_sweep.py

@@ -26,11 +26,16 @@ import time
 import jax
 
 from common import write_bench_json
+from repro.api import ExecSpec, rollout_fn_for
 from repro.core import env as EV
 from repro.core import rollout as RO
 from repro.core.workload import TraceConfig, make_trace_batch, paper_rate_for
 from repro.traffic.arrivals import PoissonArrivals
 from repro.traffic.stream import ProcessTaskSource, StreamConfig, run_stream
+
+# fused/unfused measured through the api backends ("reference" is the legacy
+# vmap-of-scans engine, "fused" the fused env-step op — bitwise-identical)
+_ENGINES = (("unfused", "reference"), ("fused", "fused"))
 
 
 def _policy(name, ecfg):
@@ -47,10 +52,11 @@ def bench_rollout_cell(E, B, *, policy, window_tasks, num_steps, impl,
     keys = jax.random.split(jax.random.PRNGKey(1), B)
     pol = _policy(policy, ecfg)
     out = {}
-    for fused in (False, True):
+    for label, backend in _ENGINES:
+        rollout = rollout_fn_for(ExecSpec(backend=backend, fused_impl=impl))
+
         def run():
-            r = RO.batch_rollout(ecfg, traces, pol, {}, keys, fused=fused,
-                                 fused_impl=impl)
+            r = rollout(ecfg, traces, pol, {}, keys)
             jax.block_until_ready(r.metrics["episode_return"])
         t0 = time.perf_counter()
         run()                                  # compile
@@ -60,7 +66,7 @@ def bench_rollout_cell(E, B, *, policy, window_tasks, num_steps, impl,
             run()
             n += 1
         eps = B * n / (time.perf_counter() - t0)
-        out["fused" if fused else "unfused"] = {
+        out[label] = {
             "eps_per_s": round(eps, 1), "compile_s": round(compile_s, 2)}
     out["speedup"] = round(out["fused"]["eps_per_s"]
                            / out["unfused"]["eps_per_s"], 2)
@@ -73,19 +79,21 @@ def bench_stream_cell(E, B, *, policy, window_tasks, windows, impl):
                      max_servers=E)
     pol = _policy(policy, ecfg)
     out = {}
-    for fused in (False, True):
+    for label, backend in _ENGINES:
+        rollout = rollout_fn_for(ExecSpec(backend=backend, fused_impl=impl))
+
         def run(num_windows):
             src = ProcessTaskSource(PoissonArrivals(tc.arrival_rate), tc,
                                     jax.random.PRNGKey(0), num_streams=B)
-            cfg = StreamConfig(num_windows=num_windows, num_streams=B,
-                               fused=fused)
+            cfg = StreamConfig(num_windows=num_windows, num_streams=B)
             t0 = time.perf_counter()
-            res = run_stream(ecfg, pol, {}, src, jax.random.PRNGKey(1), cfg)
+            res = run_stream(ecfg, pol, {}, src, jax.random.PRNGKey(1), cfg,
+                             rollout_fn=rollout)
             return time.perf_counter() - t0, res
         run(1)                                 # compile + warm
         wall, res = run(windows)
         tasks = res.summary["tasks_injected"]
-        out["fused" if fused else "unfused"] = {
+        out[label] = {
             "tasks": int(tasks), "wall_s": round(wall, 2),
             "tasks_per_s": round(tasks / wall, 1)}
     out["speedup"] = round(out["fused"]["tasks_per_s"]
@@ -147,7 +155,7 @@ def main():
     print(json.dumps(payload, indent=1))
     if args.json_out != "none":
         write_bench_json("env_step", payload, out=args.json_out or None,
-                         fused=True)
+                         fused=True, exec_backend="fused+reference")
 
 
 if __name__ == "__main__":

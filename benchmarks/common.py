@@ -17,11 +17,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ExecSpec, PolicySpec, evaluate_batch
 from repro.core import agent as AG
 from repro.core import baselines as BL
 from repro.core import env as EV
 from repro.core import ppo as PPO
-from repro.core import rollout as RO
 from repro.core import sac as SAC
 from repro.core.scenarios import PAPER_RATE_GRID as PAPER_GRID
 from repro.core.workload import (TraceConfig, make_trace, paper_rate_for,
@@ -33,12 +33,14 @@ REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def write_bench_json(name: str, payload: Dict, out: Optional[str] = None,
-                     fused: Optional[bool] = None) -> str:
+                     fused: Optional[bool] = None,
+                     exec_backend: Optional[str] = None) -> str:
     """Machine-readable perf record: BENCH_<name>.json at the repo root so
-    the numbers are tracked across PRs. Adds a timestamp, jax version and
-    the fused env-step flag (`fused=None` records the engine default), so
-    perf trajectories across PRs state which decision-step path produced
-    them."""
+    the numbers are tracked across PRs. Adds a timestamp, jax version, the
+    fused env-step flag (`fused=None` records the engine default), the
+    `repro.api` execution backend and the local device count, so perf
+    trajectories across PRs state exactly which engine + device layout
+    produced them."""
     path = out or os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     payload = dict(payload)
     payload.setdefault("bench", name)
@@ -47,6 +49,10 @@ def write_bench_json(name: str, payload: Dict, out: Optional[str] = None,
     payload.setdefault("backend", jax.default_backend())
     # batch_rollout defaults to the fused engine; None = "ran on default"
     payload.setdefault("env_step_fused", True if fused is None else bool(fused))
+    if exec_backend is None:
+        exec_backend = ("fused" if fused in (None, True) else "reference")
+    payload.setdefault("exec_backend", exec_backend)
+    payload.setdefault("device_count", jax.local_device_count())
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     print(f"bench json -> {path}")
@@ -119,16 +125,14 @@ def evaluate_algo(algo: str, num_servers: int, rate: float, *,
     per_ep: List[Dict] = []
 
     if algo in ("eat", "eat-a", "eat-d", "eat-da", "ppo", "random", "greedy"):
-        params = {}
-        if algo == "random":
-            policy = RO.uniform_policy(ecfg)
-        elif algo == "greedy":
-            policy = RO.greedy_policy(ecfg)
+        if algo in ("random", "greedy"):
+            m = evaluate_batch(ecfg, batched, PolicySpec(algo), keys,
+                               exec_spec=ExecSpec())
         else:
             policy, params, _ = train_drl(algo, num_servers, episodes,
                                           seed=seed)
-        m = BL.evaluate_policy_batch(ecfg, batched, policy, keys,
-                                     params=params)
+            m = evaluate_batch(ecfg, batched, policy, keys, params=params,
+                               exec_spec=ExecSpec())
         per_ep = [{k: float(v[i]) for k, v in m.items()}
                   for i in range(n_eval)]
     elif algo in ("genetic", "harmony"):

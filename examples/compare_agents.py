@@ -20,10 +20,9 @@ import os
 import jax
 import numpy as np
 
+from repro.api import BACKENDS, ExecSpec, PolicySpec, evaluate_batch
 from repro.core import agent as AG
-from repro.core import baselines as BL
 from repro.core import ppo as PPO
-from repro.core import rollout as RO
 from repro.core import sac as SAC
 from repro.core.env import EnvConfig
 from repro.core.workload import (TraceConfig, make_trace, make_trace_batch,
@@ -42,8 +41,12 @@ def main():
                     help="sample training traces from the scenario grid "
                          "(rate sweep, cold-start, bursty/flash arrivals) "
                          "instead of one fixed TraceConfig")
+    ap.add_argument("--backend", default="fused", choices=BACKENDS,
+                    help="repro.api execution backend for collection and "
+                         "evaluation (sharded = device-mesh batch split)")
     ap.add_argument("--out", default="artifacts/training_curves.json")
     args = ap.parse_args()
+    exec_spec = ExecSpec(backend=args.backend)
 
     ecfg = EnvConfig(num_servers=args.servers)
     rate = paper_rate_for(args.servers)
@@ -56,8 +59,9 @@ def main():
         print("curriculum cells:", [sc.name for sc in curriculum])
 
     curves = {}
-    eval_policies = {"random": (RO.uniform_policy(ecfg), {}),
-                     "greedy": (RO.greedy_policy(ecfg), {})}
+    # PolicySpec per evaluated policy: trained weights pass through params=
+    eval_specs = {"random": PolicySpec("random"),
+                  "greedy": PolicySpec("greedy")}
     for variant in args.variants.split(","):
         print(f"=== training {variant} ({args.episodes} episodes, "
               f"{args.servers} servers, rate {rate}, "
@@ -66,8 +70,9 @@ def main():
             st, hist = PPO.train_ppo(ecfg, PPO.PPOConfig(), trace_fn,
                                      args.episodes, seed=args.seed,
                                      log_every=5, num_envs=args.num_envs,
-                                     curriculum=curriculum)
-            eval_policies[variant] = (PPO.ppo_policy(ecfg), st.params)
+                                     curriculum=curriculum,
+                                     exec_spec=exec_spec)
+            eval_specs[variant] = PolicySpec("ppo", params=st.params)
         else:
             acfg = AG.AgentConfig(variant=variant)
             scfg = SAC.SACConfig(batch_size=128, warmup_steps=192,
@@ -75,20 +80,20 @@ def main():
             ts, hist = SAC.train(ecfg, acfg, scfg, trace_fn, args.episodes,
                                  seed=args.seed, log_every=5,
                                  num_envs=args.num_envs,
-                                 curriculum=curriculum)
-            eval_policies[variant] = (
-                SAC.actor_policy(ecfg, acfg, deterministic=True), ts.actor)
+                                 curriculum=curriculum, exec_spec=exec_spec)
+            eval_specs[variant] = PolicySpec("eat", params=ts.actor,
+                                             options={"acfg": acfg})
         curves[variant] = hist
 
-    # -- held-out evaluation: one jitted batched rollout per policy --------
+    # -- held-out evaluation: one batched program per policy, any backend --
     print(f"\n=== batched evaluation ({args.eval_batch} held-out traces) ===")
     eval_traces = make_trace_batch(jax.random.PRNGKey(10_000), tc,
                                    args.eval_batch)
     eval_keys = jax.random.split(jax.random.PRNGKey(777), args.eval_batch)
     evaluation = {}
-    for name, (policy, params) in eval_policies.items():
-        m = BL.evaluate_policy_batch(ecfg, eval_traces, policy, eval_keys,
-                                     params=params)
+    for name, spec in eval_specs.items():
+        m = evaluate_batch(ecfg, eval_traces, spec, eval_keys,
+                           exec_spec=exec_spec)
         evaluation[name] = {k: float(np.mean(v)) for k, v in m.items()}
     print(f"{'policy':8s} {'return':>8s} {'quality':>8s} {'resp':>8s} "
           f"{'reload':>7s}")

@@ -13,7 +13,11 @@ to --out as JSON (schema: traffic/sweep.py run_cell).
 
 Named cells: poisson (paper rate), bursty (MMPP), diurnal, flashcrowd,
 coldstart; or pass --rate to override the Poisson rate. Use --checkpoint to
-evaluate trained EAT weights with --policies eat.
+evaluate trained EAT weights with --policies eat (without it, learned
+policies run untrained and rows carry trained=false). --backend picks the
+`repro.api` execution backend; `--backend sharded` splits the stream axis
+over the local device mesh (bitwise-identical telemetry; on CPU force
+devices with XLA_FLAGS=--xla_force_host_platform_device_count=8).
 """
 from __future__ import annotations
 
@@ -21,6 +25,7 @@ import argparse
 
 import jax
 
+from repro.api import BACKENDS, ExecSpec
 from repro.core import scenarios as SC
 from repro.traffic.stream import StreamConfig
 from repro.traffic.sweep import run_sweep
@@ -61,6 +66,9 @@ def main():
                     help="override the Poisson cell's arrival rate")
     ap.add_argument("--checkpoint", default=None,
                     help="actor checkpoint dir for --policies eat/ppo")
+    ap.add_argument("--backend", default="fused", choices=BACKENDS,
+                    help="execution backend (sharded = device-mesh split "
+                         "of the stream axis, bitwise-identical)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="artifacts/traffic_sweep.json")
     args = ap.parse_args()
@@ -79,7 +87,8 @@ def main():
           f"x {args.windows} windows, {args.servers} servers")
     run_sweep(cells, args.policies.split(","), jax.random.PRNGKey(args.seed),
               stream=stream, window_tasks=args.window_tasks,
-              checkpoint=args.checkpoint, out=args.out)
+              checkpoint=args.checkpoint,
+              exec_spec=ExecSpec(backend=args.backend), out=args.out)
 
 
 if __name__ == "__main__":

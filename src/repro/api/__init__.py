@@ -1,0 +1,38 @@
+"""repro.api — the unified simulation facade.
+
+One door to everything the repo simulates:
+
+    Simulator(WorkloadSpec, ExecSpec).run(PolicySpec, key) -> SimResult
+
+* `PolicySpec` + the policy registry (`api.registry`): every scheduler —
+  baselines, the EAT/PPO agents (checkpoint restore via
+  `api.checkpoints.restore_params`), the offline meta-heuristics — under
+  one protocol, with weight provenance (`trained`) made explicit.
+* `WorkloadSpec`: episodic trace grids or streaming arrival processes,
+  built on `core.scenarios` + `traffic.arrivals`.
+* `ExecSpec`: pluggable execution backends — "reference" (legacy engine),
+  "fused" (fused env-step op, default), "sharded" (fused program
+  shard_map'd over a device mesh) — all bitwise-identical.
+
+Consumers: `examples/`, `benchmarks/`, SAC/PPO training collection, and
+`traffic.sweep`. The pre-facade doors (`traffic.policies.make_policy`,
+`baselines.evaluate_policy_batch`) survive as thin deprecated wrappers.
+"""
+from repro.api.backends import device_count, resolve_shards, rollout_fn_for
+from repro.api.checkpoints import restore_params
+from repro.api.registry import (ResolvedPolicy, UntrainedPolicyWarning,
+                                available_policies, policy_kind, register,
+                                resolve)
+from repro.api.simulator import (SimResult, Simulator, evaluate_batch,
+                                 resolve_cell)
+from repro.api.specs import (BACKENDS, MODES, ExecSpec, PolicySpec,
+                             WorkloadSpec)
+
+__all__ = [
+    "Simulator", "SimResult", "evaluate_batch", "resolve_cell",
+    "PolicySpec", "WorkloadSpec", "ExecSpec", "BACKENDS", "MODES",
+    "ResolvedPolicy", "UntrainedPolicyWarning", "available_policies",
+    "policy_kind", "register", "resolve",
+    "rollout_fn_for", "resolve_shards", "device_count",
+    "restore_params",
+]

@@ -1,0 +1,28 @@
+"""The one checkpoint-restore door for policy weights.
+
+Every `PolicySpec(checkpoint=...)` restores through `restore_params`; the
+legacy `traffic.policies._restore` and the ad-hoc example restore paths are
+folded into it. Kept separate from `common.checkpoint` (the raw npz pytree
+store) so the facade owns path/step resolution and error wording.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.common.checkpoint import latest_step, restore_checkpoint
+
+
+def restore_params(directory: str, target: Any,
+                   step: Optional[int] = None) -> Any:
+    """Restore a weight pytree into the structure of `target`.
+
+    `step=None` picks the latest step under `directory`. Raises
+    FileNotFoundError when the directory holds no checkpoint — a PolicySpec
+    that names a checkpoint must never fall back to fresh weights silently.
+    """
+    if step is None and latest_step(directory) is None:
+        raise FileNotFoundError(
+            f"no checkpoint steps under {directory!r}; a PolicySpec with "
+            "checkpoint= must point at a saved run (or pass params= / omit "
+            "both for fresh weights)")
+    return restore_checkpoint(directory, target, step=step)

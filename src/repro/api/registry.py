@@ -1,0 +1,195 @@
+"""Policy registry: one name -> (rollout policy, params, provenance).
+
+Unifies every scheduler the repo knows under the rollout policy protocol
+(`rollout.Policy`): the non-learned baselines (`random`, `fifo`, `greedy`),
+the learned agents (`eat` diffusion-SAC actor and its ablation variants,
+`ppo`), and the offline meta-heuristics (`genetic`, `harmony`) — the latter
+optimise a fixed action sequence on a workload trace at resolve time and
+replay it through `rollout.sequence_policy`.
+
+Resolution is explicit about weight provenance: a learned policy resolved
+without `params` or `checkpoint` gets *fresh-initialised* weights, is marked
+``trained=False`` and emits an `UntrainedPolicyWarning` — sweep summaries
+carry the flag, so an untrained agent can never masquerade as the paper's.
+
+    rp = resolve(PolicySpec("eat", checkpoint="runs/eat"), ecfg)
+    batch_rollout(ecfg, traces, rp.policy, rp.params, keys)
+
+Builders lazy-import agent/sac/ppo so importing `repro.api` stays cheap.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.api.checkpoints import restore_params
+from repro.api.specs import PolicySpec
+from repro.core import env as EV
+from repro.core import rollout as RO
+
+BASELINE, LEARNED, OFFLINE = "baseline", "learned", "offline"
+
+# trace_fn(key) -> trace dict; offline builders optimise their sequence on it
+TraceFn = Callable[[Any], Dict]
+
+
+class UntrainedPolicyWarning(UserWarning):
+    """A learned policy resolved to fresh-initialised weights."""
+
+
+@dataclass
+class ResolvedPolicy:
+    name: str
+    policy: RO.Policy
+    params: Any
+    trained: bool          # False iff a learned policy got fresh weights
+    kind: str              # "baseline" | "learned" | "offline"
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+_BUILDERS: Dict[str, Tuple[str, Callable]] = {}
+
+
+def register(name: str, kind: str = BASELINE):
+    """Register a builder: fn(spec, ecfg, trace_fn) -> ResolvedPolicy."""
+    def deco(fn):
+        _BUILDERS[name] = (kind, fn)
+        return fn
+    return deco
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(_BUILDERS)
+
+
+def policy_kind(name: str) -> str:
+    if name not in _BUILDERS:
+        raise ValueError(f"unknown policy {name!r}; "
+                         f"choose from {available_policies()}")
+    return _BUILDERS[name][0]
+
+
+def resolve(spec, ecfg: EV.EnvConfig, *,
+            trace_fn: Optional[TraceFn] = None) -> ResolvedPolicy:
+    """Resolve a PolicySpec (or bare name) against an env configuration.
+
+    `trace_fn` supplies the workload trace the offline meta-heuristics
+    optimise their action sequence on (the Simulator passes its scenario's
+    trace sampler); baselines and learned policies ignore it.
+    """
+    if isinstance(spec, str):
+        spec = PolicySpec(name=spec)
+    if spec.name not in _BUILDERS:
+        raise ValueError(f"unknown policy {spec.name!r}; "
+                         f"choose from {available_policies()}")
+    kind, builder = _BUILDERS[spec.name]
+    return builder(spec, ecfg, trace_fn)
+
+
+# ----------------------------------------------------------------------
+# learned-weight provenance shared by the eat/ppo builders
+def _load_weights(spec: PolicySpec, fresh_init: Callable[[], Any]):
+    """(params, trained): explicit weights > checkpoint > fresh + warning."""
+    if spec.params is not None:
+        return spec.params, True
+    params = fresh_init()
+    if spec.checkpoint:
+        return restore_params(spec.checkpoint, params), True
+    # stacklevel 4 = the caller of resolve() (builder <- resolve <- caller)
+    warnings.warn(
+        f"policy {spec.name!r} resolved with fresh-initialised weights "
+        "(no checkpoint= or params= given) — results reflect an UNTRAINED "
+        "agent and are flagged trained=False",
+        UntrainedPolicyWarning, stacklevel=4)
+    return params, False
+
+
+# ----------------------------------------------------------------------
+@register("random", BASELINE)
+def _build_random(spec, ecfg, trace_fn):
+    return ResolvedPolicy("random", RO.uniform_policy(ecfg), {}, True,
+                          BASELINE)
+
+
+@register("fifo", BASELINE)
+def _build_fifo(spec, ecfg, trace_fn):
+    steps_frac = float(spec.options.get("steps_frac", 0.5))
+    return ResolvedPolicy("fifo", RO.fifo_policy(ecfg, steps_frac), {}, True,
+                          BASELINE, {"steps_frac": steps_frac})
+
+
+@register("greedy", BASELINE)
+def _build_greedy(spec, ecfg, trace_fn):
+    return ResolvedPolicy("greedy", RO.greedy_policy(ecfg), {}, True,
+                          BASELINE)
+
+
+@register("eat", LEARNED)
+def _build_eat(spec, ecfg, trace_fn):
+    from repro.core import agent as AG
+    from repro.core import sac as SAC
+    acfg = spec.options.get("acfg")
+    if acfg is None:
+        kw = {k: spec.options[k] for k in ("variant", "T")
+              if k in spec.options}
+        acfg = AG.AgentConfig(**kw)
+    deterministic = bool(spec.options.get("deterministic", True))
+    params, trained = _load_weights(
+        spec, lambda: AG.init_actor(jax.random.PRNGKey(spec.seed), ecfg, acfg))
+    return ResolvedPolicy(
+        "eat", SAC.actor_policy(ecfg, acfg, deterministic=deterministic),
+        params, trained, LEARNED, {"variant": acfg.variant})
+
+
+@register("ppo", LEARNED)
+def _build_ppo(spec, ecfg, trace_fn):
+    from repro.core import ppo as PPO
+    params, trained = _load_weights(
+        spec, lambda: PPO.init_ppo(jax.random.PRNGKey(spec.seed), ecfg).params)
+    return ResolvedPolicy("ppo", PPO.ppo_policy(ecfg), params, trained,
+                          LEARNED)
+
+
+# ----------------------------------------------------------------------
+def _offline_trace(spec, ecfg, trace_fn, algo: str):
+    if trace_fn is None:
+        raise ValueError(
+            f"policy {algo!r} optimises an action sequence on a workload "
+            "trace; resolve it through a Simulator (which supplies its "
+            "scenario's traces) or pass trace_fn=")
+    return trace_fn(jax.random.PRNGKey(spec.seed))
+
+
+@register("genetic", OFFLINE)
+def _build_genetic(spec, ecfg, trace_fn):
+    from repro.core import baselines as BL
+    gcfg = spec.options.get("gcfg")
+    if gcfg is None:
+        kw = {k: spec.options[k] for k in
+              ("population", "generations", "parents", "elites", "seq_len",
+               "mutation_prob") if k in spec.options}
+        gcfg = BL.GeneticConfig(**kw)
+    trace = _offline_trace(spec, ecfg, trace_fn, "genetic")
+    seq, fit = BL.genetic_schedule(jax.random.PRNGKey(spec.seed + 1), ecfg,
+                                   trace, gcfg)
+    return ResolvedPolicy("genetic", RO.sequence_policy(ecfg), {"seq": seq},
+                          True, OFFLINE, {"fitness": float(fit)})
+
+
+@register("harmony", OFFLINE)
+def _build_harmony(spec, ecfg, trace_fn):
+    from repro.core import baselines as BL
+    hcfg = spec.options.get("hcfg")
+    if hcfg is None:
+        kw = {k: spec.options[k] for k in
+              ("memory_size", "improvisations", "improv_batch", "seq_len")
+              if k in spec.options}
+        hcfg = BL.HarmonyConfig(**kw)
+    trace = _offline_trace(spec, ecfg, trace_fn, "harmony")
+    seq, fit = BL.harmony_schedule(jax.random.PRNGKey(spec.seed + 1), ecfg,
+                                   trace, hcfg)
+    return ResolvedPolicy("harmony", RO.sequence_policy(ecfg), {"seq": seq},
+                          True, OFFLINE, {"fitness": float(fit)})

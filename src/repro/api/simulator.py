@@ -1,0 +1,171 @@
+"""`Simulator` — the single door to episodic and streaming simulation.
+
+    from repro import api
+
+    sim = api.Simulator(
+        api.WorkloadSpec.streaming(scenarios.bursty_traffic(8), streams=32,
+                                   num_windows=50, window_tasks=64),
+        api.ExecSpec(backend="sharded"))
+    result = sim.run(api.PolicySpec("eat", checkpoint="runs/eat"), key)
+    result.summary["latency_p99"], result.trained
+
+One Simulator = one workload x one execution backend; `run` takes any
+registered policy (see `api.registry`) and returns a `SimResult` whose
+`summary` is a flat scalar dict with the same core keys in both modes.
+Policies resolve against the workload's env, offline meta-heuristics get
+the workload's trace sampler to optimise on, and the execution backend
+("reference" | "fused" | "sharded") is bitwise-transparent: the same spec
+grid produces the same numbers on every backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.api import backends as BK
+from repro.api import registry as REG
+from repro.api.specs import ExecSpec, PolicySpec, WorkloadSpec
+from repro.core.scenarios import Scenario, make_scenario_trace
+from repro.traffic.arrivals import PoissonArrivals
+from repro.traffic.stream import ProcessTaskSource, StreamConfig, run_stream
+
+PolicyLike = Union[str, PolicySpec]
+
+
+def resolve_cell(sc: Scenario, window_tasks: Optional[int] = None):
+    """(ecfg, tcfg, process) for streaming a scenario cell: `window_tasks`
+    overrides the cell's episodic max_tasks; a missing arrival process means
+    Poisson at the cell's configured rate."""
+    ecfg, tcfg = sc.ecfg, sc.tcfg
+    if window_tasks and window_tasks != ecfg.max_tasks:
+        ecfg = dataclasses.replace(ecfg, max_tasks=int(window_tasks))
+        tcfg = dataclasses.replace(tcfg, num_tasks=int(window_tasks))
+    proc = sc.arrival if sc.arrival is not None else PoissonArrivals(
+        tcfg.arrival_rate)
+    return ecfg, tcfg, proc
+
+
+@dataclass
+class SimResult:
+    policy: str
+    trained: bool
+    kind: str                    # baseline | learned | offline
+    mode: str                    # episodic | streaming
+    backend: str
+    scenario: str
+    summary: Dict[str, float]    # flat scalars (means / QoS aggregates)
+    metrics: Dict[str, np.ndarray] = field(default_factory=dict)
+    per_window: Optional[List[Dict]] = None       # streaming only
+    wall_s: float = 0.0
+    raw: Any = None              # RolloutResult | StreamResult
+
+    def row(self) -> Dict[str, Any]:
+        """Flat telemetry row (sweep/JSON schema)."""
+        out = {"policy": self.policy, "trained": self.trained,
+               "mode": self.mode, "exec_backend": self.backend,
+               "cell": self.scenario, "wall_s": self.wall_s}
+        out.update(self.summary)
+        return out
+
+
+class Simulator:
+    """One workload x one execution backend; `run` any registered policy."""
+
+    def __init__(self, workload: WorkloadSpec,
+                 exec_spec: ExecSpec = ExecSpec()):
+        self.workload = workload
+        self.exec_spec = exec_spec
+        self.scenario = workload.scenario
+        if workload.mode == "streaming":
+            self.ecfg, self.tcfg, self.process = resolve_cell(
+                workload.scenario, workload.window_tasks)
+        else:
+            self.ecfg, self.tcfg = workload.scenario.ecfg, workload.scenario.tcfg
+            self.process = workload.scenario.arrival
+        self._rollout = BK.rollout_fn_for(exec_spec)
+
+    # -- policy resolution against this workload's env ------------------
+    def trace_fn(self):
+        """Trace sampler of this workload's cell (offline schedulers
+        optimise on it; episodic runs draw eval traces from it)."""
+        sc = dataclasses.replace(self.scenario, ecfg=self.ecfg,
+                                 tcfg=self.tcfg)
+        return lambda key: make_scenario_trace(key, sc)
+
+    def resolve(self, policy: PolicyLike) -> REG.ResolvedPolicy:
+        return REG.resolve(policy, self.ecfg, trace_fn=self.trace_fn())
+
+    # -- runs ------------------------------------------------------------
+    def run(self, policy: PolicyLike, key) -> SimResult:
+        rp = self.resolve(policy)
+        t0 = time.perf_counter()
+        if self.workload.mode == "episodic":
+            res = self._run_episodic(rp, key)
+        else:
+            res = self._run_streaming(rp, key)
+        res.wall_s = time.perf_counter() - t0
+        return res
+
+    def sweep(self, policies: Sequence[PolicyLike], key) -> List[SimResult]:
+        out = []
+        for i, p in enumerate(policies):
+            out.append(self.run(p, jax.random.fold_in(key, i)))
+        return out
+
+    def _run_episodic(self, rp: REG.ResolvedPolicy, key) -> SimResult:
+        wl = self.workload
+        k_trace, k_run = jax.random.split(key)
+        traces = jax.vmap(self.trace_fn())(jax.random.split(k_trace, wl.batch))
+        keys = jax.random.split(k_run, wl.batch)
+        res = self._rollout(self.ecfg, traces, rp.policy, rp.params, keys,
+                            num_steps=wl.num_steps, collect=wl.collect)
+        metrics = {k: np.asarray(v) for k, v in res.metrics.items()}
+        summary = {f"mean_{k}": float(np.mean(v)) for k, v in metrics.items()}
+        summary["n_episodes"] = wl.batch
+        return SimResult(policy=rp.name, trained=rp.trained, kind=rp.kind,
+                         mode="episodic", backend=self.exec_spec.backend,
+                         scenario=self.scenario.name, summary=summary,
+                         metrics=metrics, raw=res)
+
+    def _run_streaming(self, rp: REG.ResolvedPolicy, key) -> SimResult:
+        wl = self.workload
+        k_src, k_run = jax.random.split(key)
+        source = ProcessTaskSource(self.process, self.tcfg, k_src,
+                                   num_streams=wl.batch,
+                                   chunk_size=wl.chunk_size)
+        scfg = StreamConfig(num_windows=wl.num_windows, num_streams=wl.batch,
+                            max_steps_per_window=wl.max_steps_per_window,
+                            max_carry=wl.max_carry, resp_sla=wl.resp_sla,
+                            chunk_size=wl.chunk_size)
+        res = run_stream(self.ecfg, rp.policy, rp.params, source, k_run,
+                         scfg, rollout_fn=self._rollout)
+        summary = dict(res.summary)
+        summary["arrival"] = type(self.process).__name__
+        summary["num_servers"] = self.ecfg.num_servers
+        return SimResult(policy=rp.name, trained=rp.trained, kind=rp.kind,
+                         mode="streaming", backend=self.exec_spec.backend,
+                         scenario=self.scenario.name, summary=summary,
+                         per_window=res.per_window, raw=res)
+
+
+# ----------------------------------------------------------------------
+def evaluate_batch(ecfg, traces, policy, keys, *, params=None,
+                   exec_spec: ExecSpec = ExecSpec(),
+                   num_steps: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Facade door for evaluating *explicit* traces (the batched-evaluator
+    use case): B traces in one program on any backend. `policy` is either a
+    PolicySpec / registered name (resolved here; `params` ignored) or a raw
+    rollout policy callable paired with `params`. Returns per-episode (B,)
+    numpy metric arrays."""
+    if isinstance(policy, (str, PolicySpec)):
+        rp = REG.resolve(policy, ecfg)
+        policy, params = rp.policy, rp.params
+    res = BK.rollout_fn_for(exec_spec)(
+        ecfg, traces, policy, {} if params is None else params, keys,
+        num_steps=num_steps)
+    return {k: np.asarray(v) for k, v in res.metrics.items()}

@@ -1,0 +1,123 @@
+"""Declarative specs for the unified simulation facade.
+
+One simulation = (what schedules) x (what arrives) x (how it executes):
+
+    PolicySpec   — a registered policy name plus weight provenance
+                   (checkpoint dir / in-memory params / fresh seed) and
+                   builder options. Resolved by `api.registry`.
+    WorkloadSpec — an episodic trace grid or a streaming arrival process,
+                   built from a `core.scenarios.Scenario` cell.
+    ExecSpec     — which execution backend runs the batched rollout:
+                   "reference" (legacy vmap-of-scans engine), "fused"
+                   (fused env-step op, the default), or "sharded" (the
+                   fused program shard_map'd over a device mesh).
+
+`Simulator(workload, exec_spec).run(policy_spec, key)` is the single door;
+every spec is data, so a sweep is a list of specs, not a bespoke loop.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Optional
+
+from repro.core.scenarios import Scenario
+
+BACKENDS = ("reference", "fused", "sharded")
+MODES = ("episodic", "streaming")
+
+
+@dataclass(frozen=True, eq=False)
+class PolicySpec:
+    """Name -> policy, with weight provenance made explicit.
+
+    `params` short-circuits loading (already-trained in-memory weights);
+    `checkpoint` restores the latest step via `api.checkpoints
+    .restore_params`; neither means learned policies resolve to *fresh*
+    weights and are flagged `trained=False` (with an `UntrainedPolicyWarning`)
+    so sweep summaries cannot pass off an untrained agent as the paper's.
+    `options` feeds the registry builder (e.g. ``{"acfg": AgentConfig(...)}``
+    for "eat", ``{"seq_len": 512}`` for the offline meta-heuristics).
+    """
+    name: str
+    checkpoint: Optional[str] = None
+    params: Any = None
+    seed: int = 0
+    options: Mapping[str, Any] = field(default_factory=dict)
+
+
+@dataclass(frozen=True, eq=False)
+class WorkloadSpec:
+    """What the simulator schedules: one scenario cell, episodic or streaming.
+
+    * ``mode="episodic"``: `batch` fresh traces of the cell run to completion
+      (`num_steps` caps the decision budget; `collect=True` returns stacked
+      transitions for training consumers).
+    * ``mode="streaming"``: `batch` parallel open-loop streams, `num_windows`
+      windows of `window_tasks` tasks each (`window_tasks=None` keeps the
+      cell's episodic `max_tasks`), with the cell's arrival process (Poisson
+      at the cell rate when the scenario has none).
+    """
+    scenario: Scenario
+    mode: str = "episodic"
+    batch: int = 32
+    num_steps: Optional[int] = None
+    collect: bool = False
+    # streaming-only knobs (mirror traffic.stream.StreamConfig)
+    num_windows: int = 16
+    window_tasks: Optional[int] = None
+    max_steps_per_window: Optional[int] = None
+    max_carry: Optional[int] = None
+    resp_sla: float = 120.0
+    chunk_size: int = 0
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
+
+    @classmethod
+    def episodic(cls, scenario: Scenario, *, batch: int = 32,
+                 num_steps: Optional[int] = None,
+                 collect: bool = False) -> "WorkloadSpec":
+        return cls(scenario=scenario, mode="episodic", batch=batch,
+                   num_steps=num_steps, collect=collect)
+
+    @classmethod
+    def streaming(cls, scenario: Scenario, *, streams: int = 32,
+                  num_windows: int = 16, window_tasks: Optional[int] = None,
+                  max_steps_per_window: Optional[int] = None,
+                  max_carry: Optional[int] = None, resp_sla: float = 120.0,
+                  chunk_size: int = 0) -> "WorkloadSpec":
+        return cls(scenario=scenario, mode="streaming", batch=streams,
+                   num_windows=num_windows, window_tasks=window_tasks,
+                   max_steps_per_window=max_steps_per_window,
+                   max_carry=max_carry, resp_sla=resp_sla,
+                   chunk_size=chunk_size)
+
+
+@dataclass(frozen=True)
+class ExecSpec:
+    """How the batched rollout executes. Hashable: it keys compiled-program
+    caches (`api.backends`).
+
+    * ``backend="fused"`` (default): the fused env-step engine
+      (`batch_rollout(fused=True)`) — one fused decision op advances all B
+      envs per step.
+    * ``backend="reference"``: the legacy vmap-of-scans engine on the
+      compositional `env.step` (bitwise-identical, slower; the oracle).
+    * ``backend="sharded"``: the fused program `shard_map`'d over a 1-D
+      device mesh (`launch.mesh.make_data_mesh`) — the batch/stream axis
+      splits over `mesh_devices` devices (0 = all local devices; degraded
+      to gcd(batch, devices) when the batch does not divide). Bitwise-
+      identical to "fused" on the same inputs.
+    """
+    backend: str = "fused"
+    fused_impl: str = "auto"       # fused/sharded: "auto" | "ref" | "pallas"
+    mesh_devices: int = 0          # sharded: devices on the mesh (0 = all)
+    mesh_axis: str = "data"        # sharded: mesh axis name
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend!r}")

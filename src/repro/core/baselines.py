@@ -255,15 +255,17 @@ def evaluate_policy(ecfg: EV.EnvConfig, trace: Dict, act_fn, key,
 
 def evaluate_policy_batch(ecfg: EV.EnvConfig, traces: Dict, policy, keys,
                           params=None, num_steps: int = None) -> Dict:
-    """Batched evaluation: B traces in one jitted program.
+    """Deprecated: use `repro.api.evaluate_batch` (same per-episode metric
+    arrays, plus PolicySpec resolution and pluggable execution backends).
 
-    `traces` carries a leading (B,) axis (``stack_traces`` /
-    ``workload.make_trace_batch``); `policy` follows the rollout protocol —
-    use ``rollout.uniform_policy(ecfg)`` / ``rollout.greedy_policy(ecfg)``
-    for the non-learned baselines. Returns episode metrics as (B,) numpy
-    arrays; row b is bitwise what ``evaluate_policy`` returns on
-    (traces[b], keys[b]).
+    Batched evaluation: B traces in one jitted program. `traces` carries a
+    leading (B,) axis; `policy` follows the rollout protocol. Row b is
+    bitwise what ``evaluate_policy`` returns on (traces[b], keys[b]).
     """
-    res = RO.batch_rollout(ecfg, traces, policy, {} if params is None else params,
-                           keys, num_steps=num_steps)
-    return {k: np.asarray(v) for k, v in res.metrics.items()}
+    import warnings
+    warnings.warn(
+        "baselines.evaluate_policy_batch is deprecated; use "
+        "repro.api.evaluate_batch", DeprecationWarning, stacklevel=2)
+    from repro.api import evaluate_batch
+    return evaluate_batch(ecfg, traces, policy, keys, params=params,
+                          num_steps=num_steps)

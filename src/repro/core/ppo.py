@@ -134,12 +134,17 @@ def ppo_update(st: PPOState, batch: Dict, *, ecfg: EV.EnvConfig, pcfg: PPOConfig
 
 def train_ppo(ecfg: EV.EnvConfig, pcfg: PPOConfig, trace_fn, num_episodes: int,
               seed: int = 0, log_every: int = 10, num_envs: int = 4,
-              curriculum=None):
+              curriculum=None, exec_spec=None):
     """On-policy training on top of the batched rollout engine: each
     iteration collects `num_envs` full episodes in one jitted program, then
     runs clipped-surrogate epochs over the pooled (valid) transitions with
     per-episode GAE. `curriculum` (list of `scenarios.Scenario` sharing
-    `ecfg`) replaces `trace_fn` with per-round sampling from the grid."""
+    `ecfg`) replaces `trace_fn` with per-round sampling from the grid.
+    `exec_spec` (an `api.ExecSpec`) picks the collection execution backend
+    (reference / fused / sharded, all bitwise-identical)."""
+    from repro.api.backends import rollout_fn_for
+    from repro.api.specs import ExecSpec
+    rollout = rollout_fn_for(exec_spec or ExecSpec())
     key = jax.random.PRNGKey(seed)
     key, k0 = jax.random.split(key)
     st = init_ppo(k0, ecfg)
@@ -159,8 +164,8 @@ def train_ppo(ecfg: EV.EnvConfig, pcfg: PPOConfig, trace_fn, num_episodes: int,
         traces = stack_traces([round_trace_fn(k)
                                for k in jax.random.split(kt, B)])
         keys = jax.random.split(ke, B)
-        res = RO.batch_rollout(ecfg, traces, ppo_policy(ecfg), st.params,
-                               keys, collect=True)
+        res = rollout(ecfg, traces, ppo_policy(ecfg), st.params,
+                      keys, collect=True)
         tr = res.transitions
         valid = np.asarray(tr.valid)
         lens = valid.sum(axis=1)

@@ -236,6 +236,20 @@ def greedy_policy(ecfg: EV.EnvConfig) -> Policy:
 
 
 @functools.lru_cache(maxsize=None)
+def sequence_policy(ecfg: EV.EnvConfig) -> Policy:
+    """Replay a precomputed action sequence (`params["seq"]`, (T, A) in
+    env space) by decision index: step i plays seq[i] (clamped at the end).
+    This is how the offline meta-heuristic schedules (genetic/harmony,
+    which optimise a fixed sequence with no run-time feedback) run through
+    the batched/streaming engines under the common policy protocol."""
+    def policy(params, key, trace, state, obs):
+        seq = params["seq"]
+        idx = jnp.minimum(state.steps_taken, seq.shape[0] - 1)
+        return seq[idx], {}
+    return policy
+
+
+@functools.lru_cache(maxsize=None)
 def fifo_policy(ecfg: EV.EnvConfig, steps_frac: float = 0.5) -> Policy:
     """FIFO baseline: always try to schedule the earliest-arrived visible
     task (queue slot 0 — the visible queue is sorted by arrival) at a fixed

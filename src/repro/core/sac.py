@@ -161,12 +161,19 @@ def warmup_policy(ecfg: EV.EnvConfig):
 
 def collect_batch(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, actor_params,
                   traces, keys, buffer: ReplayBuffer, *,
-                  warmup: bool = False) -> Tuple[Dict, int]:
+                  warmup: bool = False, exec_spec=None) -> Tuple[Dict, int]:
     """Roll out B parallel episodes and push the valid transitions into the
-    replay buffer (agent-space actions). Returns (stacked metrics, n added)."""
+    replay buffer (agent-space actions). Returns (stacked metrics, n added).
+
+    `exec_spec` (an `api.ExecSpec`, default fused) picks the execution
+    backend — collection shards over a device mesh with
+    ``ExecSpec(backend="sharded")``, bitwise-identically."""
+    from repro.api.backends import rollout_fn_for
+    from repro.api.specs import ExecSpec
     policy = warmup_policy(ecfg) if warmup else actor_policy(ecfg, acfg)
     params = {} if warmup else actor_params
-    res = RO.batch_rollout(ecfg, traces, policy, params, keys, collect=True)
+    rollout = rollout_fn_for(exec_spec or ExecSpec())
+    res = rollout(ecfg, traces, policy, params, keys, collect=True)
     tr = res.transitions
     valid = np.asarray(tr.valid).reshape(-1)
     flat = lambda x: np.asarray(x).reshape((-1,) + x.shape[2:])[valid]  # noqa: E731
@@ -236,7 +243,7 @@ def seed_with_demonstrations(buffer: ReplayBuffer, ecfg: EV.EnvConfig,
 def train(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, scfg: SACConfig,
           trace_fn, num_episodes: int, seed: int = 0, log_every: int = 10,
           callback=None, demo_episodes: int = 0, num_envs: int = 4,
-          curriculum=None):
+          curriculum=None, exec_spec=None):
     """Full training loop (Algorithm 2). trace_fn(key) -> trace dict.
 
     Experience comes from the batched rollout engine: each iteration rolls
@@ -248,7 +255,9 @@ def train(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, scfg: SACConfig,
     `curriculum` (a list of `scenarios.Scenario` sharing `ecfg`, e.g. from
     `scenarios.training_curriculum`) replaces `trace_fn`: each collection
     round samples one cell, so the policy trains across the workload grid
-    — rate sweep, cold-start-heavy mixes, bursty/flash arrivals."""
+    — rate sweep, cold-start-heavy mixes, bursty/flash arrivals.
+    `exec_spec` (an `api.ExecSpec`) picks the collection execution backend
+    (reference / fused / sharded, all bitwise-identical)."""
     key = jax.random.PRNGKey(seed)
     rng = np.random.default_rng(seed)
     if curriculum:
@@ -276,7 +285,8 @@ def train(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, scfg: SACConfig,
         keys = jax.random.split(ke, B)
         warmup = buffer.size < scfg.warmup_steps
         metrics, n_new = collect_batch(ecfg, acfg, ts.actor, traces, keys,
-                                       buffer, warmup=warmup)
+                                       buffer, warmup=warmup,
+                                       exec_spec=exec_spec)
         # -- updates (same update/env-step ratio as the per-step schedule)
         if buffer.size >= scfg.warmup_steps:
             for _ in range((n_new // scfg.update_every) * scfg.updates_per_step):

@@ -46,3 +46,14 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh for CPU tests (uses however many host devices exist)."""
     return _make_mesh((data, model), ("data", "model"))
+
+
+def make_data_mesh(devices: int = 0, axis: str = "data"):
+    """1-D data-parallel mesh over `devices` local devices (0 = all).
+
+    This is the mesh the `repro.api` sharded execution backend shards the
+    rollout batch/stream axis over (`api/backends.py`); on CPU CI it is
+    driven with XLA_FLAGS=--xla_force_host_platform_device_count=N.
+    """
+    n = int(devices) or jax.local_device_count()
+    return _make_mesh((n,), (axis,))

@@ -1,18 +1,22 @@
-"""Policy-adapter layer: one name -> (rollout policy, params) for streaming.
+"""DEPRECATED policy-adapter layer — use `repro.api` instead.
 
-Everything the streaming engine and the sweep driver schedule with goes
-through here, so a sweep cell can say `--policies random,fifo,greedy,eat`
-and get the paper's baselines plus the EAT SAC agent under one protocol
-(`rollout.Policy`). The EAT adapter evaluates the diffusion actor
-deterministically; weights come from a checkpoint directory when given,
-otherwise from a fresh initialisation (useful for plumbing/perf runs — the
-summary then reflects an untrained policy and says so).
+`make_policy(name, ecfg, ...)` predates the unified facade; the policy
+registry (`repro.api.registry`) now resolves every scheduler — baselines,
+EAT/PPO (with uniform checkpoint restore via `api.restore_params`), and the
+offline meta-heuristics — under one protocol, with weight provenance made
+explicit (`ResolvedPolicy.trained`). This module survives as a thin wrapper
+so pre-facade callers keep working; internal consumers must not use it (CI
+errors on DeprecationWarnings raised from `repro.*` modules).
+
+    # old                                # new
+    make_policy("eat", ecfg,             api.resolve(
+        checkpoint=d)                        api.PolicySpec("eat",
+                                                 checkpoint=d), ecfg)
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional, Tuple
-
-import jax
 
 from repro.core import env as EV
 from repro.core import rollout as RO
@@ -22,41 +26,32 @@ LEARNED = ("eat", "ppo")
 
 
 def available_policies() -> Tuple[str, ...]:
-    return BASELINES + LEARNED
+    """Names this wrapper can build: the registry minus the offline
+    meta-heuristics (they need a workload trace to optimise on, which the
+    tuple-returning `make_policy` interface cannot supply — resolve them
+    through `api.Simulator` / `api.resolve(..., trace_fn=)`)."""
+    from repro.api import registry as REG
+    return tuple(n for n in REG.available_policies()
+                 if REG.policy_kind(n) != REG.OFFLINE)
 
 
 def make_policy(name: str, ecfg: EV.EnvConfig, *, acfg=None,
                 checkpoint: Optional[str] = None, params=None,
                 seed: int = 0) -> Tuple[RO.Policy, Dict]:
-    """Resolve a policy name to (policy_fn, params) for `batch_rollout` /
-    `run_stream`. `params` short-circuits loading (already-trained weights);
-    `checkpoint` restores the latest step from a checkpoint directory."""
-    if name == "random":
-        return RO.uniform_policy(ecfg), {}
-    if name == "fifo":
-        return RO.fifo_policy(ecfg), {}
-    if name == "greedy":
-        return RO.greedy_policy(ecfg), {}
-    if name == "eat":
-        from repro.core import agent as AG
-        from repro.core import sac as SAC
-        acfg = acfg or AG.AgentConfig()
-        if params is None:
-            params = AG.init_actor(jax.random.PRNGKey(seed), ecfg, acfg)
-            if checkpoint:
-                params = _restore(checkpoint, params)
-        return SAC.actor_policy(ecfg, acfg, deterministic=True), params
-    if name == "ppo":
-        from repro.core import ppo as PPO
-        if params is None:
-            params = PPO.init_ppo(jax.random.PRNGKey(seed), ecfg).params
-            if checkpoint:
-                params = _restore(checkpoint, params)
-        return PPO.ppo_policy(ecfg), params
-    raise ValueError(f"unknown policy {name!r}; "
-                     f"choose from {available_policies()}")
+    """Deprecated: resolve a PolicySpec through `repro.api` instead.
 
-
-def _restore(directory: str, target):
-    from repro.common.checkpoint import restore_checkpoint
-    return restore_checkpoint(directory, target)
+    Thin wrapper over `api.registry.resolve`; same (policy_fn, params)
+    return. Unlike the pre-facade version, a learned policy resolved to
+    fresh weights now emits an `UntrainedPolicyWarning` (the registry's
+    `trained=False` flag is dropped by this tuple interface — another
+    reason to migrate)."""
+    warnings.warn(
+        "traffic.policies.make_policy is deprecated; use repro.api "
+        "(registry.resolve / PolicySpec)", DeprecationWarning, stacklevel=2)
+    from repro.api import registry as REG
+    from repro.api.specs import PolicySpec
+    options = {"acfg": acfg} if acfg is not None else {}
+    rp = REG.resolve(PolicySpec(name=name, checkpoint=checkpoint,
+                                params=params, seed=seed, options=options),
+                     ecfg)
+    return rp.policy, rp.params

@@ -199,13 +199,18 @@ class StreamResult(NamedTuple):
 
 # ----------------------------------------------------------------------
 def run_stream(ecfg: EV.EnvConfig, policy, params, source, key,
-               scfg: StreamConfig = StreamConfig()) -> StreamResult:
+               scfg: StreamConfig = StreamConfig(),
+               rollout_fn=None) -> StreamResult:
     """Drive `num_windows` windows of K = ecfg.max_tasks tasks per stream.
 
     Window w uses PRNG key fold_in(key, w) split over the B streams, so a
     single-window stream from a fresh carry reproduces the episodic
     `batch_rollout(ecfg, traces, policy, params, split(fold_in(key, 0), B))`
     bit-for-bit. Device memory is O(B * K) regardless of the horizon.
+
+    `rollout_fn` swaps the per-window execution engine (the `repro.api`
+    backends — reference / fused / sharded — all bitwise-identical); None
+    keeps `batch_rollout` on the `scfg.fused` path.
     """
     K, B = ecfg.max_tasks, scfg.num_streams
     T = scfg.max_steps_per_window or min(4 * K, ecfg.max_steps)
@@ -246,9 +251,13 @@ def run_stream(ecfg: EV.EnvConfig, policy, params, source, key,
                     cols[c][b, nl:] = new[c]
         traces = {c: jnp.asarray(v) for c, v in cols.items()}
         keys = jax.random.split(jax.random.fold_in(key, w), B)
-        res = RO.batch_rollout(ecfg, traces, policy, params, keys,
-                               num_steps=T, init_state=carry,
-                               fused=scfg.fused)
+        if rollout_fn is None:
+            res = RO.batch_rollout(ecfg, traces, policy, params, keys,
+                                   num_steps=T, init_state=carry,
+                                   fused=scfg.fused)
+        else:
+            res = rollout_fn(ecfg, traces, policy, params, keys,
+                             num_steps=T, init_state=carry)
         stats, carry, lcols, n_left = _window_seam(ecfg, traces,
                                                    res.final_state, edges, sla)
         n_left = np.asarray(n_left)

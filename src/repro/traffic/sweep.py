@@ -1,67 +1,64 @@
-"""Grid-sweep driver: (scenario cell x policy) streaming runs with QoS
-telemetry rows, JSON output, and wall-clock throughput.
+"""Grid-sweep driver on the `repro.api` facade: (scenario cell x policy)
+streaming runs with QoS telemetry rows, JSON output, and wall-clock
+throughput.
 
 A cell is a `core.scenarios.Scenario`; its `arrival` field selects the
 open-loop process (None falls back to Poisson at the cell's tcfg rate). Each
-(cell, policy) pair streams `num_windows` windows of `window_tasks` tasks
-over `num_streams` parallel streams — one jitted program per window — so a
-default sweep covers >= 10^5 tasks per policy at O(window) memory.
+(cell, policy) pair is one `api.Simulator` streaming run — `num_windows`
+windows of `window_tasks` tasks over `num_streams` parallel streams on the
+chosen execution backend — so a default sweep covers >= 10^5 tasks per
+policy at O(window) memory, and `--backend sharded` splits the stream axis
+over a device mesh with bitwise-identical telemetry.
 
     PYTHONPATH=src python examples/traffic_sweep.py --policies random,fifo
 
-is the CLI front-end; `benchmarks/bench_traffic.py` reuses `run_cell` for
-the perf-trajectory JSON.
+is the CLI front-end; `benchmarks/bench_traffic.py` shares the facade.
+Every row carries `trained` (weight provenance) and `exec_backend`.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
-import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
 
+from repro.api import (ExecSpec, PolicySpec, Simulator, WorkloadSpec,
+                       resolve_cell)
 from repro.core.scenarios import Scenario
-from repro.traffic.arrivals import PoissonArrivals
-from repro.traffic.policies import make_policy
-from repro.traffic.stream import ProcessTaskSource, StreamConfig, run_stream
+from repro.traffic.stream import StreamConfig
+
+__all__ = ["resolve_cell", "run_cell", "run_sweep"]
 
 
-def resolve_cell(sc: Scenario, window_tasks: Optional[int] = None):
-    """(ecfg, tcfg, process) for streaming: window size overrides the cell's
-    episodic max_tasks; a missing arrival process means Poisson at the
-    cell's configured rate."""
-    ecfg, tcfg = sc.ecfg, sc.tcfg
-    if window_tasks and window_tasks != ecfg.max_tasks:
-        ecfg = dataclasses.replace(ecfg, max_tasks=int(window_tasks))
-        tcfg = dataclasses.replace(tcfg, num_tasks=int(window_tasks))
-    proc = sc.arrival if sc.arrival is not None else PoissonArrivals(
-        tcfg.arrival_rate)
-    return ecfg, tcfg, proc
+def _workload(sc: Scenario, stream: StreamConfig,
+              window_tasks: Optional[int]) -> WorkloadSpec:
+    return WorkloadSpec.streaming(
+        sc, streams=stream.num_streams, num_windows=stream.num_windows,
+        window_tasks=window_tasks,
+        max_steps_per_window=stream.max_steps_per_window,
+        max_carry=stream.max_carry, resp_sla=stream.resp_sla,
+        chunk_size=stream.chunk_size)
 
 
 def run_cell(sc: Scenario, policy_name: str, key, *,
              stream: StreamConfig = StreamConfig(),
              window_tasks: Optional[int] = None,
-             checkpoint: Optional[str] = None, seed: int = 0) -> Dict:
-    """One (cell, policy) streaming run -> flat telemetry row."""
-    ecfg, tcfg, proc = resolve_cell(sc, window_tasks)
-    policy, params = make_policy(policy_name, ecfg, checkpoint=checkpoint,
-                                 seed=seed)
-    k_src, k_run = jax.random.split(key)
-    source = ProcessTaskSource(proc, tcfg, k_src,
-                               num_streams=stream.num_streams,
-                               chunk_size=stream.chunk_size)
-    t0 = time.perf_counter()
-    res = run_stream(ecfg, policy, params, source, k_run, stream)
-    wall = time.perf_counter() - t0
-    row = {"cell": sc.name, "policy": policy_name,
-           "arrival": type(proc).__name__,
-           "num_servers": ecfg.num_servers,
-           "wall_s": wall,
-           "tasks_per_wall_s": res.summary["tasks_injected"] / max(wall, 1e-9)}
-    row.update(res.summary)
+             checkpoint: Optional[str] = None, seed: int = 0,
+             exec_spec: ExecSpec = ExecSpec()) -> Dict:
+    """One (cell, policy) streaming run -> flat telemetry row.
+
+    `exec_spec` picks the execution backend; a pre-facade caller's explicit
+    ``StreamConfig(fused=False)`` still selects the legacy engine when
+    `exec_spec` is left at its default."""
+    if not stream.fused and exec_spec == ExecSpec():
+        exec_spec = ExecSpec(backend="reference")
+    sim = Simulator(_workload(sc, stream, window_tasks), exec_spec)
+    res = sim.run(PolicySpec(name=policy_name, checkpoint=checkpoint,
+                             seed=seed), key)
+    row = res.row()
+    row["tasks_per_wall_s"] = (row["tasks_injected"]
+                               / max(row["wall_s"], 1e-9))
     return row
 
 
@@ -69,6 +66,7 @@ def run_sweep(cells: Sequence[Scenario], policy_names: Sequence[str], key, *,
               stream: StreamConfig = StreamConfig(),
               window_tasks: Optional[int] = None,
               checkpoint: Optional[str] = None,
+              exec_spec: ExecSpec = ExecSpec(),
               out: Optional[str] = None, verbose: bool = True) -> List[Dict]:
     """Sweep the (cell x policy) grid; optionally dump rows to JSON."""
     rows = []
@@ -76,10 +74,12 @@ def run_sweep(cells: Sequence[Scenario], policy_names: Sequence[str], key, *,
         for pi, pname in enumerate(policy_names):
             k = jax.random.fold_in(jax.random.fold_in(key, ci), pi)
             row = run_cell(sc, pname, k, stream=stream,
-                           window_tasks=window_tasks, checkpoint=checkpoint)
+                           window_tasks=window_tasks, checkpoint=checkpoint,
+                           exec_spec=exec_spec)
             rows.append(row)
             if verbose:
-                print(f"[{row['cell']:>18s} | {pname:>6s}] "
+                flag = "" if row["trained"] else " [UNTRAINED]"
+                print(f"[{row['cell']:>18s} | {pname:>6s}{flag}] "
                       f"tasks={row['tasks_injected']:7d} "
                       f"p50={row['latency_p50']:8.1f}s "
                       f"p99={row['latency_p99']:8.1f}s "

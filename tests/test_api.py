@@ -1,0 +1,243 @@
+"""Unified simulation facade (`repro.api`): policy registry resolution and
+weight provenance, the checkpoint-restore door, the registry x backend
+smoke grid (every registered policy through episodic AND streaming
+simulation on the reference / fused / sharded backends with identical
+summaries; sharded bitwise vs fused), and the deprecated pre-facade
+wrappers. Run under XLA_FLAGS=--xla_force_host_platform_device_count=8
+(CI `sharded-parity` job / `make test-sharded`) the sharded backend uses a
+real multi-device mesh."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core import scenarios as SC
+from repro.core.env import EnvConfig
+from repro.core.workload import TraceConfig
+
+# tiny cell so the full registry x mode x backend grid stays cheap
+ECFG = EnvConfig(num_servers=4, max_tasks=8, queue_window=4, max_steps=24)
+TCFG = TraceConfig(num_tasks=8, arrival_rate=0.05, max_servers=4)
+CELL = SC.Scenario(name="api-test-cell", ecfg=ECFG, tcfg=TCFG)
+
+# cheap builder options for the expensive-to-resolve policies
+OPTS = {
+    "eat": {"variant": "eat-da", "T": 2},
+    "ppo": {},
+    "genetic": {"population": 8, "generations": 2, "parents": 4,
+                "seq_len": 24},
+    "harmony": {"memory_size": 8, "improvisations": 8, "improv_batch": 4,
+                "seq_len": 24},
+}
+
+
+def _spec(name):
+    return api.PolicySpec(name, options=OPTS.get(name, {}))
+
+
+def _summary_arrays(summary):
+    return {k: np.asarray(v) for k, v in summary.items()
+            if not isinstance(v, str)}
+
+
+# ------------------------------------------------------- registry
+def test_registry_covers_all_schedulers():
+    names = api.available_policies()
+    for expected in ("random", "fifo", "greedy", "eat", "ppo", "genetic",
+                     "harmony"):
+        assert expected in names
+    with pytest.raises(ValueError):
+        api.resolve("oracle", ECFG)
+    assert api.policy_kind("greedy") == "baseline"
+    assert api.policy_kind("eat") == "learned"
+    assert api.policy_kind("harmony") == "offline"
+
+
+def test_baselines_resolve_trained_without_weights():
+    for name in ("random", "fifo", "greedy"):
+        rp = api.resolve(name, ECFG)
+        assert rp.trained and rp.params == {} and rp.kind == "baseline"
+
+
+def test_learned_policy_fresh_weights_flagged_untrained():
+    """The PR-4 bugfix: no checkpoint/params -> trained=False + warning."""
+    for name in ("eat", "ppo"):
+        with pytest.warns(api.UntrainedPolicyWarning):
+            rp = api.resolve(_spec(name), ECFG)
+        assert rp.trained is False
+
+
+def test_learned_policy_with_params_is_trained_and_silent(recwarn):
+    with pytest.warns(api.UntrainedPolicyWarning):
+        fresh = api.resolve(_spec("ppo"), ECFG)
+    recwarn.clear()
+    rp = api.resolve(api.PolicySpec("ppo", params=fresh.params), ECFG)
+    assert rp.trained is True
+    assert not [w for w in recwarn
+                if issubclass(w.category, api.UntrainedPolicyWarning)]
+
+
+def test_offline_policy_requires_workload_context():
+    with pytest.raises(ValueError):
+        api.resolve(_spec("genetic"), ECFG)   # no trace_fn, no Simulator
+
+
+# ------------------------------------------------------- checkpoint door
+def test_checkpoint_restore_roundtrip(tmp_path):
+    from repro.common.checkpoint import save_checkpoint
+    with pytest.warns(api.UntrainedPolicyWarning):
+        fresh = api.resolve(_spec("ppo"), ECFG)
+    bumped = jax.tree_util.tree_map(lambda x: x + 1.0, fresh.params)
+    save_checkpoint(str(tmp_path), 3, bumped)
+    rp = api.resolve(api.PolicySpec("ppo", checkpoint=str(tmp_path)), ECFG)
+    assert rp.trained is True
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        rp.params, bumped)
+
+
+def test_restore_from_empty_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        api.restore_params(str(tmp_path), {"w": np.zeros(2)})
+
+
+# ------------------------------------------------------- exec backends
+def test_exec_spec_validation():
+    with pytest.raises(ValueError):
+        api.ExecSpec(backend="gpu-magic")
+    with pytest.raises(ValueError):
+        api.WorkloadSpec(scenario=CELL, mode="sideways")
+
+
+def test_resolve_shards_gcd_degrade():
+    ndev = api.device_count()
+    spec = api.ExecSpec(backend="sharded")
+    assert api.resolve_shards(8 * ndev, spec) == ndev
+    assert api.resolve_shards(1, spec) == 1
+    with pytest.raises(ValueError):
+        api.resolve_shards(8, api.ExecSpec(backend="sharded",
+                                           mesh_devices=ndev + 1))
+
+
+# ------------------------------------------------------- registry x backend
+@pytest.mark.parametrize("name", ["random", "fifo", "greedy", "eat", "ppo",
+                                  "genetic", "harmony"])
+def test_registry_backend_grid(name):
+    """Every registered policy runs through episodic AND streaming
+    simulation on all three backends with identical summary metrics
+    (sharded parity bitwise vs fused)."""
+    key = jax.random.PRNGKey(7)
+    workloads = {
+        "episodic": api.WorkloadSpec.episodic(CELL, batch=8, num_steps=16),
+        "streaming": api.WorkloadSpec.streaming(CELL, streams=8,
+                                                num_windows=2),
+    }
+    for mode, wl in workloads.items():
+        results = {}
+        for backend in api.BACKENDS:
+            sim = api.Simulator(wl, api.ExecSpec(backend=backend))
+            if name in ("eat", "ppo"):      # fresh weights -> flagged
+                with pytest.warns(api.UntrainedPolicyWarning):
+                    results[backend] = sim.run(_spec(name), key)
+                assert results[backend].trained is False
+            else:
+                results[backend] = sim.run(_spec(name), key)
+                assert results[backend].trained is True
+        base = _summary_arrays(results["fused"].summary)
+        for backend in ("reference", "sharded"):
+            other = _summary_arrays(results[backend].summary)
+            assert base.keys() == other.keys()
+            for k in base:
+                np.testing.assert_array_equal(
+                    base[k], other[k],
+                    err_msg=f"{name}/{mode}/{backend}/{k}")
+        if mode == "episodic":   # per-episode arrays bitwise, sharded/ref
+            for backend in ("reference", "sharded"):
+                for k, v in results["fused"].metrics.items():
+                    np.testing.assert_array_equal(
+                        v, results[backend].metrics[k],
+                        err_msg=f"{name}/episodic/{backend}/{k}")
+
+
+def test_sharded_collect_transitions_bitwise():
+    """Training consumers collect transitions; the sharded backend must
+    return the identical stacked (B, T, ...) trajectory."""
+    wl = api.WorkloadSpec.episodic(CELL, batch=8, num_steps=12, collect=True)
+    key = jax.random.PRNGKey(11)
+    tf = api.Simulator(wl, api.ExecSpec(backend="fused")).run("random", key)
+    ts = api.Simulator(wl, api.ExecSpec(backend="sharded")).run("random", key)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        tf.raw.transitions, ts.raw.transitions)
+
+
+def test_sharded_uses_multi_device_mesh_when_available():
+    """Under the CI sharded-parity job (8 forced host devices) the grid
+    above must actually exercise a multi-device mesh."""
+    ndev = api.device_count()
+    assert api.resolve_shards(8 * ndev,
+                              api.ExecSpec(backend="sharded")) == ndev
+
+
+# ------------------------------------------------------- training consumers
+def test_sac_collect_on_sharded_backend_matches_fused():
+    from repro.core import agent as AG
+    from repro.core import sac as SAC
+    from repro.core.replay import ReplayBuffer
+    from repro.core.workload import make_trace_batch
+    acfg = AG.AgentConfig(variant="eat-da", T=2)
+    actor = AG.init_actor(jax.random.PRNGKey(0), ECFG, acfg)
+    traces = make_trace_batch(jax.random.PRNGKey(1), TCFG, 4)
+    keys = jax.random.split(jax.random.PRNGKey(2), 4)
+    out = {}
+    for backend in ("fused", "sharded"):
+        buf = ReplayBuffer(4096, ECFG.obs_shape, ECFG.action_dim)
+        m, n = SAC.collect_batch(ECFG, acfg, actor, traces, keys, buf,
+                                 exec_spec=api.ExecSpec(backend=backend))
+        out[backend] = (n, {k: np.asarray(v) for k, v in m.items()})
+    assert out["fused"][0] == out["sharded"][0]
+    for k in out["fused"][1]:
+        np.testing.assert_array_equal(out["fused"][1][k],
+                                      out["sharded"][1][k])
+
+
+# ------------------------------------------------------- sweep rows
+def test_sweep_row_carries_provenance_and_backend():
+    from repro.traffic.stream import StreamConfig
+    from repro.traffic.sweep import run_cell
+    row = run_cell(CELL, "fifo", jax.random.PRNGKey(0),
+                   stream=StreamConfig(num_windows=2, num_streams=2),
+                   exec_spec=api.ExecSpec(backend="fused"))
+    assert row["trained"] is True
+    assert row["exec_backend"] == "fused"
+    assert row["cell"] == "api-test-cell"
+    assert row["tasks_injected"] == (row["tasks_scheduled"]
+                                     + row["tasks_dropped"]
+                                     + row["tasks_leftover"])
+
+
+# ------------------------------------------------------- deprecated doors
+def test_make_policy_wrapper_warns_and_delegates():
+    from repro.traffic import policies as TP
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        policy, params = TP.make_policy("greedy", ECFG)
+    assert params == {}
+    assert policy is api.resolve("greedy", ECFG).policy
+
+
+def test_evaluate_policy_batch_wrapper_warns_and_matches():
+    from repro.core import baselines as BL
+    from repro.core import rollout as RO
+    from repro.core.workload import make_trace_batch
+    traces = make_trace_batch(jax.random.PRNGKey(3), TCFG, 4)
+    keys = jax.random.split(jax.random.PRNGKey(4), 4)
+    with pytest.warns(DeprecationWarning, match="repro.api"):
+        old = BL.evaluate_policy_batch(ECFG, traces,
+                                       RO.uniform_policy(ECFG), keys)
+    new = api.evaluate_batch(ECFG, traces, "random", keys)
+    for k in old:
+        np.testing.assert_array_equal(old[k], new[k])
