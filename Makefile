@@ -1,16 +1,28 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-all test-sharded bench-rollout bench-traffic bench-env-step bench-sharded-rollout traffic-sweep
+.PHONY: test test-all test-sharded train-stream-smoke bench-rollout bench-traffic bench-env-step bench-sharded-rollout bench-stream-train traffic-sweep
 
-test-sharded:    ## api backend parity under 8 forced host devices
-	XLA_FLAGS=--xla_force_host_platform_device_count=8 $(PY) -m pytest tests/test_api.py -q
+test-sharded:    ## api backend + stream-training parity under 8 forced host devices
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 $(PY) -m pytest tests/test_api.py tests/test_stream_train.py -q
 
 test:            ## tier-1: fast suite (slow tests deselected by default)
 	$(PY) -m pytest -x -q
 
 test-all:        ## full suite including slow trainings
 	$(PY) -m pytest -q -m ""
+
+train-stream-smoke:  ## few-window streaming-training smoke (tiny nets), fused then sharded mesh
+	$(PY) examples/train_stream.py --rounds 3 --streams 4 --window-tasks 8 \
+	  --servers 4 --variant eat-da --diffusion-steps 2 --warmup-steps 32 \
+	  --max-updates-per-round 2 --rate-scale 2.0
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	  $(PY) examples/train_stream.py --backend sharded --rounds 3 --streams 4 \
+	  --window-tasks 8 --servers 4 --variant eat-da --diffusion-steps 2 \
+	  --warmup-steps 32 --max-updates-per-round 2 --rate-scale 2.0
+
+bench-stream-train:  ## stream-training throughput fused vs sharded -> BENCH_stream_train.json
+	$(PY) benchmarks/bench_stream_train.py
 
 bench-rollout:   ## batched-rollout engine vs host-loop evaluator
 	$(PY) benchmarks/bench_batch_rollout.py

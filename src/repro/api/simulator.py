@@ -143,7 +143,7 @@ class Simulator:
                             max_carry=wl.max_carry, resp_sla=wl.resp_sla,
                             chunk_size=wl.chunk_size)
         res = run_stream(self.ecfg, rp.policy, rp.params, source, k_run,
-                         scfg, rollout_fn=self._rollout)
+                         scfg, rollout_fn=self._rollout, collect=wl.collect)
         summary = dict(res.summary)
         summary["arrival"] = type(self.process).__name__
         summary["num_servers"] = self.ecfg.num_servers

@@ -55,7 +55,11 @@ class WorkloadSpec:
     * ``mode="streaming"``: `batch` parallel open-loop streams, `num_windows`
       windows of `window_tasks` tasks each (`window_tasks=None` keeps the
       cell's episodic `max_tasks`), with the cell's arrival process (Poisson
-      at the cell rate when the scenario has none).
+      at the cell rate when the scenario has none). `collect=True` is the
+      streaming *training* mode: each window's stacked (B, T, ...)
+      transitions come back on `SimResult.raw.transitions` for training
+      consumers (`repro.training.stream_train` drives the window engine
+      directly for bounded memory).
     """
     scenario: Scenario
     mode: str = "episodic"
@@ -88,12 +92,12 @@ class WorkloadSpec:
                   num_windows: int = 16, window_tasks: Optional[int] = None,
                   max_steps_per_window: Optional[int] = None,
                   max_carry: Optional[int] = None, resp_sla: float = 120.0,
-                  chunk_size: int = 0) -> "WorkloadSpec":
+                  chunk_size: int = 0, collect: bool = False) -> "WorkloadSpec":
         return cls(scenario=scenario, mode="streaming", batch=streams,
                    num_windows=num_windows, window_tasks=window_tasks,
                    max_steps_per_window=max_steps_per_window,
                    max_carry=max_carry, resp_sla=resp_sla,
-                   chunk_size=chunk_size)
+                   chunk_size=chunk_size, collect=collect)
 
 
 @dataclass(frozen=True)

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Any, Dict, NamedTuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -108,6 +108,76 @@ def compute_gae(rewards, values, dones, last_value, gamma, lam):
     return adv, adv + values
 
 
+def pool_gae(tr, pcfg: PPOConfig, last_values=None) -> Dict[str, np.ndarray]:
+    """Per-episode GAE over the valid prefix of stacked (B, T, ...)
+    transitions, pooled into one flat update batch.
+
+    `last_values` ((B,) array or None) bootstraps each row past its last
+    valid step. None = episodic semantics: the row ran to termination and
+    the env's final done flag zeroes any bootstrap. Given = streaming
+    semantics: the caller asserts the row ended at a window seam, which is
+    a truncation, not a terminal state — the final step's done flag is
+    overridden so the critic's value of the final `next_obs` actually
+    bootstraps (the env raises done when the window drains or hits its
+    step/time budget, but the stream, its backlog, and its server
+    occupancy continue into the next window).
+    """
+    valid = np.asarray(tr.valid)
+    B = valid.shape[0]
+    lens = valid.sum(axis=1)
+    chunks = {k: [] for k in ("obs", "action", "logp", "adv", "ret")}
+    for b in range(B):
+        L = int(lens[b])
+        if L == 0:
+            continue
+        last_v = 0.0 if last_values is None else float(last_values[b])
+        dones = np.asarray(tr.done[b, :L])
+        if last_values is not None:
+            dones = dones.copy()
+            dones[-1] = 0.0            # seam = truncation, keep the bootstrap
+        adv, ret = compute_gae(np.asarray(tr.reward[b, :L]),
+                               np.asarray(tr.extras["value"][b, :L]),
+                               dones, last_v,
+                               pcfg.gamma, pcfg.gae_lambda)
+        chunks["obs"].append(np.asarray(tr.obs[b, :L]))
+        chunks["action"].append(np.asarray(tr.extras["agent_action"][b, :L]))
+        chunks["logp"].append(np.asarray(tr.extras["logp"][b, :L]))
+        chunks["adv"].append(adv)
+        chunks["ret"].append(ret)
+    if not chunks["adv"]:
+        empty = {"obs": tr.obs, "action": tr.extras["agent_action"],
+                 "logp": tr.extras["logp"]}
+        return {k: np.zeros((0,) + np.asarray(v).shape[2:], np.float32)
+                for k, v in {**empty, "adv": tr.reward,
+                             "ret": tr.reward}.items()}
+    return {k: np.concatenate(v).astype(np.float32)
+            for k, v in chunks.items()}
+
+
+def run_ppo_epochs(st: PPOState, data: Dict[str, np.ndarray], rng,
+                   ecfg: EV.EnvConfig, pcfg: PPOConfig,
+                   max_updates: Optional[int] = None
+                   ) -> Tuple[PPOState, int]:
+    """Clipped-surrogate epochs over one pooled batch (shared by the
+    episodic and streaming trainers); `max_updates` caps the minibatch
+    gradient steps. Returns (state, updates actually run)."""
+    n = len(data["adv"])
+    done = 0
+    if n == 0:
+        return st, 0
+    for _ in range(pcfg.epochs):
+        perm = rng.permutation(n)
+        mb = max(1, n // pcfg.minibatches)
+        for i in range(0, n, mb):
+            if max_updates is not None and done >= max_updates:
+                return st, done
+            idx = perm[i:i + mb]
+            batch = {k: jnp.asarray(v[idx]) for k, v in data.items()}
+            st, _ = ppo_update(st, batch, ecfg=ecfg, pcfg=pcfg)
+            done += 1
+    return st, done
+
+
 @functools.partial(jax.jit, static_argnames=("ecfg", "pcfg"))
 def ppo_update(st: PPOState, batch: Dict, *, ecfg: EV.EnvConfig, pcfg: PPOConfig):
     def loss_fn(params):
@@ -144,12 +214,13 @@ def train_ppo(ecfg: EV.EnvConfig, pcfg: PPOConfig, trace_fn, num_episodes: int,
     (reference / fused / sharded, all bitwise-identical)."""
     from repro.api.backends import rollout_fn_for
     from repro.api.specs import ExecSpec
+    from repro.core.sac import host_rng
     rollout = rollout_fn_for(exec_spec or ExecSpec())
     key = jax.random.PRNGKey(seed)
     key, k0 = jax.random.split(key)
     st = init_ppo(k0, ecfg)
     history = []
-    rng = np.random.default_rng(seed)
+    rng = host_rng(key)
     if curriculum:
         from repro.core.scenarios import curriculum_picker
         pick = curriculum_picker(ecfg, curriculum)
@@ -167,31 +238,10 @@ def train_ppo(ecfg: EV.EnvConfig, pcfg: PPOConfig, trace_fn, num_episodes: int,
         res = rollout(ecfg, traces, ppo_policy(ecfg), st.params,
                       keys, collect=True)
         tr = res.transitions
-        valid = np.asarray(tr.valid)
-        lens = valid.sum(axis=1)
+        lens = np.asarray(tr.valid).sum(axis=1)
         # -- per-episode GAE over the valid prefix, pooled into one batch
-        chunks = {k: [] for k in ("obs", "action", "logp", "adv", "ret")}
-        for b in range(B):
-            L = int(lens[b])
-            adv, ret = compute_gae(np.asarray(tr.reward[b, :L]),
-                                   np.asarray(tr.extras["value"][b, :L]),
-                                   np.asarray(tr.done[b, :L]), 0.0,
-                                   pcfg.gamma, pcfg.gae_lambda)
-            chunks["obs"].append(np.asarray(tr.obs[b, :L]))
-            chunks["action"].append(np.asarray(tr.extras["agent_action"][b, :L]))
-            chunks["logp"].append(np.asarray(tr.extras["logp"][b, :L]))
-            chunks["adv"].append(adv)
-            chunks["ret"].append(ret)
-        data = {k: np.concatenate(v).astype(np.float32)
-                for k, v in chunks.items()}
-        n = len(data["adv"])
-        for _ in range(pcfg.epochs):
-            perm = rng.permutation(n)
-            mb = max(1, n // pcfg.minibatches)
-            for i in range(0, n, mb):
-                idx = perm[i:i + mb]
-                batch = {k: jnp.asarray(v[idx]) for k, v in data.items()}
-                st, m = ppo_update(st, batch, ecfg=ecfg, pcfg=pcfg)
+        data = pool_gae(tr, pcfg)
+        st, _ = run_ppo_epochs(st, data, rng, ecfg, pcfg)
         for b in range(B):
             em = {k: float(v[b]) for k, v in res.metrics.items()}
             em.update(episode=ep, episode_len=int(lens[b]))

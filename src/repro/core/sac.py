@@ -68,6 +68,30 @@ def _soft_update(target, online, tau: float):
     return jax.tree_util.tree_map(lambda t, o: (1 - tau) * t + tau * o, target, online)
 
 
+@functools.partial(jax.jit, static_argnames=("ecfg",))
+def _jit_env_step(ecfg: EV.EnvConfig, trace, state, action):
+    """One cached jitted env step with the trace as a *traced* argument.
+
+    The host-loop drivers (`run_episode`, `seed_with_demonstrations`) used
+    to build `jax.jit(lambda s, a: EV.step(ecfg, trace, s, a))` per episode,
+    closing over the trace as a compile-time constant — every episode
+    compiled a fresh program. One program per (ecfg, shape) now serves every
+    trace; tests/test_stream_train.py pins the compile count.
+    """
+    return EV.step(ecfg, trace, state, action)
+
+
+def host_rng(key) -> np.random.Generator:
+    """Host-side RNG (curriculum cell picks, replay sampling, minibatch
+    permutations) derived from the JAX key by folding in a fixed constant
+    and drawing fresh bits — never from the raw integer seed, which would
+    mirror `PRNGKey(seed)` and couple curriculum/replay sampling to network
+    initialisation across seeds."""
+    bits = jax.random.bits(jax.random.fold_in(key, 0x9E3779B9), (4,),
+                           jnp.uint32)
+    return np.random.default_rng(np.asarray(bits).tolist())
+
+
 @functools.partial(jax.jit, static_argnames=("ecfg", "acfg", "scfg"))
 def update_step(ts: TrainState, batch: Dict, key, *, ecfg: EV.EnvConfig,
                 acfg: AG.AgentConfig, scfg: SACConfig) -> Tuple[TrainState, Dict]:
@@ -159,6 +183,26 @@ def warmup_policy(ecfg: EV.EnvConfig):
     return policy
 
 
+def flatten_valid_transitions(tr) -> Tuple[np.ndarray, ...]:
+    """Stacked (B, T, ...) collected transitions -> flat (N, ...) arrays of
+    the valid steps, in the replay-buffer layout (obs, agent-space action,
+    reward, next_obs, done). One layout shared by episodic collection and
+    the streaming trainer (`repro.training.stream_train`), so their buffers
+    are bitwise-comparable."""
+    valid = np.asarray(tr.valid).reshape(-1)
+    flat = lambda x: np.asarray(x).reshape((-1,) + x.shape[2:])[valid]  # noqa: E731
+    return (flat(tr.obs), flat(tr.extras["agent_action"]), flat(tr.reward),
+            flat(tr.next_obs), flat(tr.done))
+
+
+def push_transitions(buffer: ReplayBuffer, tr) -> int:
+    """Flatten the valid steps of stacked transitions into the buffer;
+    returns the number of transitions added."""
+    flat = flatten_valid_transitions(tr)
+    buffer.add_batch(*flat)
+    return len(flat[2])
+
+
 def collect_batch(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, actor_params,
                   traces, keys, buffer: ReplayBuffer, *,
                   warmup: bool = False, exec_spec=None) -> Tuple[Dict, int]:
@@ -174,12 +218,31 @@ def collect_batch(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, actor_params,
     params = {} if warmup else actor_params
     rollout = rollout_fn_for(exec_spec or ExecSpec())
     res = rollout(ecfg, traces, policy, params, keys, collect=True)
-    tr = res.transitions
-    valid = np.asarray(tr.valid).reshape(-1)
-    flat = lambda x: np.asarray(x).reshape((-1,) + x.shape[2:])[valid]  # noqa: E731
-    buffer.add_batch(flat(tr.obs), flat(tr.extras["agent_action"]),
-                     flat(tr.reward), flat(tr.next_obs), flat(tr.done))
-    return res.metrics, int(valid.sum())
+    n = push_transitions(buffer, res.transitions)
+    return res.metrics, n
+
+
+def run_update_schedule(ts: TrainState, buffer: ReplayBuffer, rng, key,
+                        n_new: int, *, ecfg: EV.EnvConfig,
+                        acfg: AG.AgentConfig, scfg: SACConfig,
+                        max_updates: int = None):
+    """The per-step gradient schedule over `n_new` fresh env steps: once the
+    buffer passes warmup, run (n_new // update_every) * updates_per_step
+    update steps (capped by `max_updates`) on batches sampled with the host
+    `rng`. Shared by the episodic and streaming trainers. Returns
+    (new train state, advanced key, updates run)."""
+    n_upd = 0
+    if buffer.size >= scfg.warmup_steps:
+        n_upd = (n_new // scfg.update_every) * scfg.updates_per_step
+        if max_updates is not None:
+            n_upd = min(n_upd, max_updates)
+        for _ in range(n_upd):
+            key, ku = jax.random.split(key)
+            batch = {k: jnp.asarray(v) for k, v in
+                     buffer.sample(rng, scfg.batch_size).items()}
+            ts, _ = update_step(ts, batch, ku, ecfg=ecfg, acfg=acfg,
+                                scfg=scfg)
+    return ts, key, n_upd
 
 
 def run_episode(ecfg: EV.EnvConfig, trace, actor_params, acfg: AG.AgentConfig,
@@ -187,8 +250,7 @@ def run_episode(ecfg: EV.EnvConfig, trace, actor_params, acfg: AG.AgentConfig,
                 step_fn=None):
     """Host-driven episode; returns (metrics, transitions, total_reward)."""
     if step_fn is None:
-        step_fn = jax.jit(lambda s, a: EV.step(ecfg, trace, s, a),
-                          static_argnums=())
+        step_fn = functools.partial(_jit_env_step, ecfg, trace)
     state = EV.reset(ecfg)
     obs = EV.observe(ecfg, trace, state)
     total_r, steps = 0.0, 0
@@ -224,7 +286,7 @@ def seed_with_demonstrations(buffer: ReplayBuffer, ecfg: EV.EnvConfig,
     for _ in range(episodes):
         key, kt = jax.random.split(key)
         trace = trace_fn(kt)
-        step_fn = jax.jit(lambda s, a: EV.step(ecfg, trace, s, a))
+        step_fn = functools.partial(_jit_env_step, ecfg, trace)
         state = EV.reset(ecfg)
         obs = EV.observe(ecfg, trace, state)
         done = False
@@ -259,7 +321,7 @@ def train(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, scfg: SACConfig,
     `exec_spec` (an `api.ExecSpec`) picks the collection execution backend
     (reference / fused / sharded, all bitwise-identical)."""
     key = jax.random.PRNGKey(seed)
-    rng = np.random.default_rng(seed)
+    rng = host_rng(key)
     if curriculum:
         from repro.core.scenarios import curriculum_picker
         pick = curriculum_picker(ecfg, curriculum)
@@ -288,13 +350,8 @@ def train(ecfg: EV.EnvConfig, acfg: AG.AgentConfig, scfg: SACConfig,
                                        buffer, warmup=warmup,
                                        exec_spec=exec_spec)
         # -- updates (same update/env-step ratio as the per-step schedule)
-        if buffer.size >= scfg.warmup_steps:
-            for _ in range((n_new // scfg.update_every) * scfg.updates_per_step):
-                key, ku = jax.random.split(key)
-                batch = {k: jnp.asarray(v) for k, v in
-                         buffer.sample(rng, scfg.batch_size).items()}
-                ts, m = update_step(ts, batch, ku, ecfg=ecfg, acfg=acfg,
-                                    scfg=scfg)
+        ts, key, _ = run_update_schedule(ts, buffer, rng, key, n_new,
+                                         ecfg=ecfg, acfg=acfg, scfg=scfg)
         for b in range(B):
             em = {k: float(v[b]) for k, v in metrics.items()}
             em.update(episode=ep, episode_len=int(metrics["episode_len"][b]))

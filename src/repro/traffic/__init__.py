@@ -4,15 +4,18 @@ QoS telemetry. See `arrivals`, `stream`, `metrics`, `policies`, `sweep`."""
 from repro.traffic.arrivals import (DiurnalArrivals, FlashCrowdArrivals,
                                     MMPPArrivals, PoissonArrivals,
                                     ReplayArrivals, generate_trace,
-                                    make_process)
+                                    make_process, scale_rate)
 from repro.traffic.metrics import LatencyHistogram, StreamAggregator
-from repro.traffic.stream import (ProcessTaskSource, StreamConfig,
-                                  StreamResult, TraceTaskSource, run_stream)
+from repro.traffic.stream import (CurriculumTaskSource, ProcessTaskSource,
+                                  StreamConfig, StreamResult, StreamRunner,
+                                  TraceTaskSource, WindowResult, run_stream)
 
 __all__ = [
     "PoissonArrivals", "MMPPArrivals", "DiurnalArrivals",
     "FlashCrowdArrivals", "ReplayArrivals", "make_process", "generate_trace",
+    "scale_rate",
     "LatencyHistogram", "StreamAggregator",
-    "StreamConfig", "StreamResult", "ProcessTaskSource", "TraceTaskSource",
+    "StreamConfig", "StreamResult", "StreamRunner", "WindowResult",
+    "CurriculumTaskSource", "ProcessTaskSource", "TraceTaskSource",
     "run_stream",
 ]

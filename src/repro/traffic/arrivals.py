@@ -203,6 +203,28 @@ def make_process(kind: str, **kwargs):
     return _KINDS[kind](**kwargs)
 
 
+def scale_rate(proc, factor: float):
+    """Uniformly scale a process's arrival intensity by `factor` — the
+    sustained-overload knob for streaming training/benchmarks (factor > 1
+    offers more load than the cluster drains). Replay traces have no free
+    intensity parameter and cannot be scaled."""
+    from dataclasses import replace
+    if factor == 1.0:
+        return proc
+    if factor <= 0.0:
+        raise ValueError(f"rate factor must be positive, got {factor}")
+    if isinstance(proc, PoissonArrivals):
+        return replace(proc, rate=proc.rate * factor)
+    if isinstance(proc, MMPPArrivals):
+        return replace(proc, rates=tuple(r * factor for r in proc.rates))
+    if isinstance(proc, DiurnalArrivals):
+        return replace(proc, base_rate=proc.base_rate * factor)
+    if isinstance(proc, FlashCrowdArrivals):
+        return replace(proc, base_rate=proc.base_rate * factor,
+                       spike_rate=proc.spike_rate * factor)
+    raise ValueError(f"cannot rate-scale {type(proc).__name__}")
+
+
 def generate_trace(key, proc, tc, n: int = None):
     """Episodic bridge: one fixed-size trace dict (`workload.make_trace`
     schema) whose arrival times come from `proc` instead of the fixed-rate

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core import env as EV
 from repro.core import rollout as RO
+from repro.core.rollout import Transitions
 from repro.core.workload import TraceConfig, sample_task_attrs
 from repro.traffic import metrics as MX
 
@@ -53,36 +54,64 @@ class StreamConfig:
 
 # ----------------------------------------------------------------------
 # task sources: host-side open-loop suppliers of (arr_time, c, model, noise)
-class ProcessTaskSource:
-    """Draws tasks from an arrival process + TraceConfig attribute marginals.
+class CurriculumTaskSource:
+    """Piecewise arrival curriculum over one continuous stream.
 
-    Keeps one process state and one absolute arrival clock per stream;
-    refills per-stream buffers in fixed-size chunks through a single jitted,
-    vmapped sampler, so chunk generation compiles once per run.
+    `cells` is a list of (arrival process, TraceConfig) pairs; every stream
+    keeps ONE shared absolute arrival clock, and each fixed-size refill
+    chunk is drawn from the currently-selected cell's process + attribute
+    marginals. `set_cell(i)` switches the generator from the next refill
+    on — the chunk default is one window's worth of tasks, so a switch
+    typically lands on the very next window — while the clock, buffered
+    arrivals, and carried backlog stay continuous across the switch: the
+    agent trains on the backlog distribution its own scheduling induced,
+    not on fresh resets.
+
+    Refills go through one jitted, vmapped sampler per cell, so chunk
+    generation compiles once per (cell, run). `ProcessTaskSource` is the
+    single-cell special case (with a larger, refill-amortising chunk
+    default), bitwise-identical to its pre-curriculum behaviour.
     """
 
-    def __init__(self, proc, tc: TraceConfig, key, num_streams: int = 1,
-                 chunk_size: int = 0):
-        self.proc = proc
-        self.tc = tc
+    def __init__(self, cells, key, num_streams: int = 1, chunk_size: int = 0):
+        if not cells:
+            raise ValueError("CurriculumTaskSource needs at least one cell")
+        self.cells = [(proc, tc) for proc, tc in cells]
         self.B = int(num_streams)
-        self.chunk = int(chunk_size) if chunk_size else max(4 * tc.num_tasks, 64)
-        k_init, self._attr_key = jax.random.split(key)
-        self._states = jax.vmap(proc.init)(jax.random.split(k_init, self.B))
-        self._sample = jax.jit(jax.vmap(lambda s: proc.sample(s, self.chunk)))
-        self._attrs = jax.jit(jax.vmap(
-            lambda k: sample_task_attrs(k, tc, self.chunk)))
+        tc0 = self.cells[0][1]
+        self.chunk = int(chunk_size) if chunk_size else max(tc0.num_tasks, 1)
+        # key layout: one init key per cell, the attribute key LAST — for a
+        # single cell this is exactly the historical ProcessTaskSource
+        # split(key) -> (k_init, k_attr) derivation (bitwise-stable streams)
+        keys = jax.random.split(key, len(self.cells) + 1)
+        self._attr_key = keys[-1]
+        self._states, self._samplers, self._attr_fns = [], [], []
+        for (proc, tc), k in zip(self.cells, keys[:-1]):
+            self._states.append(jax.vmap(proc.init)(
+                jax.random.split(k, self.B)))
+            self._samplers.append(jax.jit(jax.vmap(
+                lambda s, p=proc: p.sample(s, self.chunk))))
+            self._attr_fns.append(jax.jit(jax.vmap(
+                lambda kk, t=tc: sample_task_attrs(kk, t, self.chunk))))
+        self.active = 0
         self._clock = np.zeros(self.B, np.float64)   # absolute arrival clock
         self._buf = [{c: np.zeros((0,), _DTYPES[c]) for c in _COLS}
                      for _ in range(self.B)]
 
+    def set_cell(self, i: int) -> None:
+        if not 0 <= int(i) < len(self.cells):
+            raise ValueError(f"cell index {i} out of range "
+                             f"[0, {len(self.cells)})")
+        self.active = int(i)
+
     def _refill(self) -> None:
-        self._states, gaps = self._sample(self._states)
+        a = self.active
+        self._states[a], gaps = self._samplers[a](self._states[a])
         gaps = np.asarray(gaps, np.float64)                    # (B, chunk)
         arr = self._clock[:, None] + np.cumsum(gaps, axis=1)
         self._clock = arr[:, -1].copy()
         self._attr_key, k = jax.random.split(self._attr_key)
-        c, model, noise = self._attrs(jax.random.split(k, self.B))
+        c, model, noise = self._attr_fns[a](jax.random.split(k, self.B))
         c, model, noise = (np.asarray(c), np.asarray(model), np.asarray(noise))
         for b in range(self.B):
             new = {"arr_time": arr[b].astype(np.float64), "c": c[b],
@@ -97,6 +126,20 @@ class ProcessTaskSource:
         out = {col: self._buf[stream][col][:n] for col in _COLS}
         self._buf[stream] = {col: self._buf[stream][col][n:] for col in _COLS}
         return out
+
+
+class ProcessTaskSource(CurriculumTaskSource):
+    """Draws tasks from ONE arrival process + TraceConfig attribute
+    marginals — the single-cell curriculum source with a larger chunk
+    default (4 windows) that amortises refills over a long sweep."""
+
+    def __init__(self, proc, tc: TraceConfig, key, num_streams: int = 1,
+                 chunk_size: int = 0):
+        super().__init__(
+            [(proc, tc)], key, num_streams=num_streams,
+            chunk_size=int(chunk_size) if chunk_size
+            else max(4 * tc.num_tasks, 64))
+        self.proc, self.tc = proc, tc
 
 
 class TraceTaskSource:
@@ -195,86 +238,136 @@ class StreamResult(NamedTuple):
     per_window: List[Dict]
     aggregator: MX.StreamAggregator
     final_carry: EV.EnvState
+    transitions: Optional[List[Transitions]] = None   # per window, collect=
 
 
-# ----------------------------------------------------------------------
-def run_stream(ecfg: EV.EnvConfig, policy, params, source, key,
-               scfg: StreamConfig = StreamConfig(),
-               rollout_fn=None) -> StreamResult:
-    """Drive `num_windows` windows of K = ecfg.max_tasks tasks per stream.
+class WindowResult(NamedTuple):
+    """One window of one `StreamRunner`: raw per-stream stats, the flat
+    per-window ledger record, rollout metrics, and (collect=True) the
+    window's stacked (B, T, ...) transitions."""
+    window: int
+    stats: Dict[str, np.ndarray]
+    record: Dict
+    metrics: Dict
+    transitions: Optional[Transitions]
+
+
+class StreamRunner:
+    """Stateful windowed streaming: each `run_window()` call advances every
+    stream by one window of K = ecfg.max_tasks tasks and returns that
+    window's stats (and, with `collect=True`, its stacked transitions),
+    while backlog, clock epoch, and server occupancy carry across the seam.
+
+    This is the collect-capable engine under both `run_stream` (which just
+    loops it) and the streaming trainers (`repro.training.stream_train`),
+    which interleave gradient updates between windows: the policy callable
+    and params may be swapped per window (e.g. warmup -> actor, fresh actor
+    weights every round) without disturbing the carried stream state.
 
     Window w uses PRNG key fold_in(key, w) split over the B streams, so a
-    single-window stream from a fresh carry reproduces the episodic
+    single-window run from a fresh carry reproduces the episodic
     `batch_rollout(ecfg, traces, policy, params, split(fold_in(key, 0), B))`
-    bit-for-bit. Device memory is O(B * K) regardless of the horizon.
-
-    `rollout_fn` swaps the per-window execution engine (the `repro.api`
-    backends — reference / fused / sharded — all bitwise-identical); None
-    keeps `batch_rollout` on the `scfg.fused` path.
+    bit-for-bit — on every execution backend (`rollout_fn` swaps in the
+    `repro.api` reference / fused / sharded engines, all bitwise-identical;
+    None keeps `batch_rollout` on the `scfg.fused` path). The transition
+    layout is stable across seams: always (B, T, ...) with window-local
+    clocks in the observations and `valid` masking steps past the drain.
     """
-    K, B = ecfg.max_tasks, scfg.num_streams
-    T = scfg.max_steps_per_window or min(4 * K, ecfg.max_steps)
-    max_carry = K // 2 if scfg.max_carry is None else int(scfg.max_carry)
-    if not 0 <= max_carry < K:
-        raise ValueError(f"max_carry must be in [0, {K}), got {max_carry}")
-    edges = jnp.asarray(MX.DEFAULT_EDGES)
-    sla = jnp.float32(scfg.resp_sla)
-    agg = MX.StreamAggregator(ecfg.num_servers, ecfg.q_min, scfg.resp_sla,
-                              edges=MX.DEFAULT_EDGES)
 
-    carry = _reset_batch(ecfg, B)
-    leftovers = [{c: np.zeros((0,), _DTYPES[c]) for c in _COLS}
-                 for _ in range(B)]
-    t0 = np.zeros(B, np.float64)            # absolute epoch of window start
-    per_window: List[Dict] = []
+    def __init__(self, ecfg: EV.EnvConfig, policy, params, source, key,
+                 scfg: StreamConfig = StreamConfig(), rollout_fn=None):
+        K, B = ecfg.max_tasks, scfg.num_streams
+        max_carry = K // 2 if scfg.max_carry is None else int(scfg.max_carry)
+        if not 0 <= max_carry < K:
+            raise ValueError(f"max_carry must be in [0, {K}), got {max_carry}")
+        self.ecfg, self.scfg = ecfg, scfg
+        self.policy, self.params = policy, params
+        self.source, self.key = source, key
+        self.rollout_fn = rollout_fn
+        self.K, self.B = K, B
+        self.T = scfg.max_steps_per_window or min(4 * K, ecfg.max_steps)
+        self.max_carry = max_carry
+        self._edges = jnp.asarray(MX.DEFAULT_EDGES)
+        self._sla = jnp.float32(scfg.resp_sla)
+        self.agg = MX.StreamAggregator(ecfg.num_servers, ecfg.q_min,
+                                       scfg.resp_sla, edges=MX.DEFAULT_EDGES)
+        self.carry = _reset_batch(ecfg, B)
+        self.leftovers = [{c: np.zeros((0,), _DTYPES[c]) for c in _COLS}
+                          for _ in range(B)]
+        self.t0 = np.zeros(B, np.float64)   # absolute epoch of window start
+        self.window = 0
+        self.per_window: List[Dict] = []
 
-    for w in range(scfg.num_windows):
+    # ------------------------------------------------------------------
+    def _build_window(self):
+        """Fill the next window's traces: shed over-carry backlog, re-inject
+        the surviving leftovers, top up with fresh arrivals."""
+        K, B = self.K, self.B
         cols = {c: np.zeros((B, K), _DTYPES[c]) for c in _COLS}
         n_injected = np.zeros(B, np.int64)
         n_dropped = np.zeros(B, np.int64)
+        n_carried = np.zeros(B, np.int64)
         for b in range(B):
-            lo = leftovers[b]
+            lo = self.leftovers[b]
             nl = len(lo["arr_time"])
-            if nl > max_carry:             # shed the stalest backlog
-                n_dropped[b] = nl - max_carry
-                lo = {c: v[nl - max_carry:] for c, v in lo.items()}
-                nl = max_carry
+            if nl > self.max_carry:        # shed the stalest backlog
+                n_dropped[b] = nl - self.max_carry
+                lo = {c: v[nl - self.max_carry:] for c, v in lo.items()}
+                nl = self.max_carry
+            n_carried[b] = nl
             n_new = K - nl
-            new = source.take(b, n_new)
+            new = self.source.take(b, n_new)
             n_injected[b] = n_new
             for c in _COLS:
                 cols[c][b, :nl] = lo[c]
                 if c == "arr_time":        # absolute -> window-local clock
                     cols[c][b, nl:] = (new[c].astype(np.float64)
-                                       - t0[b]).astype(np.float32)
+                                       - self.t0[b]).astype(np.float32)
                 else:
                     cols[c][b, nl:] = new[c]
+        return cols, n_injected, n_dropped, n_carried
+
+    def run_window(self, *, policy=None, params=None,
+                   collect: bool = False) -> WindowResult:
+        """Advance every stream by one window. `policy`/`params`, when
+        given, replace the runner's current ones from this window on (the
+        trainers push freshly-updated actor weights each round)."""
+        if policy is not None:
+            self.policy = policy
+        if params is not None:
+            self.params = params
+        w = self.window
+        cols, n_injected, n_dropped, n_carried = self._build_window()
         traces = {c: jnp.asarray(v) for c, v in cols.items()}
-        keys = jax.random.split(jax.random.fold_in(key, w), B)
-        if rollout_fn is None:
-            res = RO.batch_rollout(ecfg, traces, policy, params, keys,
-                                   num_steps=T, init_state=carry,
-                                   fused=scfg.fused)
+        keys = jax.random.split(jax.random.fold_in(self.key, w), self.B)
+        if self.rollout_fn is None:
+            res = RO.batch_rollout(self.ecfg, traces, self.policy,
+                                   self.params, keys, num_steps=self.T,
+                                   init_state=self.carry, collect=collect,
+                                   fused=self.scfg.fused)
         else:
-            res = rollout_fn(ecfg, traces, policy, params, keys,
-                             num_steps=T, init_state=carry)
-        stats, carry, lcols, n_left = _window_seam(ecfg, traces,
-                                                   res.final_state, edges, sla)
+            res = self.rollout_fn(self.ecfg, traces, self.policy,
+                                  self.params, keys, num_steps=self.T,
+                                  init_state=self.carry, collect=collect)
+        stats, self.carry, lcols, n_left = _window_seam(
+            self.ecfg, traces, res.final_state, self._edges, self._sla)
         n_left = np.asarray(n_left)
         lcols = {c: np.asarray(v) for c, v in lcols.items()}
-        leftovers = [{c: lcols[c][b, :n_left[b]] for c in _COLS}
-                     for b in range(B)]
-        t0 += np.asarray(stats["elapsed"], np.float64)
+        self.leftovers = [{c: lcols[c][b, :n_left[b]] for c in _COLS}
+                          for b in range(self.B)]
+        self.t0 += np.asarray(stats["elapsed"], np.float64)
 
         rec = {k: np.asarray(v) for k, v in stats.items()}
         rec["n_injected"] = n_injected
         rec["n_dropped"] = n_dropped
+        rec["n_carried"] = n_carried
         rec["n_leftover"] = n_left.astype(np.int64)
-        agg.update(rec)
+        self.agg.update(rec)
         n_sched_w = int(rec["n_sched"].sum())
-        per_window.append({
+        record = {
             "window": w,
             "injected": int(n_injected.sum()),
+            "carried": int(n_carried.sum()),
             "scheduled": n_sched_w,
             "dropped": int(n_dropped.sum()),
             "leftover": int(n_left.sum()),
@@ -282,12 +375,47 @@ def run_stream(ecfg: EV.EnvConfig, policy, params, source, key,
             "mean_latency": float(rec["sum_resp"].sum() / max(n_sched_w, 1)),
             "episode_return_mean": float(np.mean(np.asarray(
                 res.metrics["episode_return"]))),
-        })
+        }
+        self.per_window.append(record)
+        self.window += 1
+        return WindowResult(window=w, stats=rec, record=record,
+                            metrics=res.metrics,
+                            transitions=res.transitions if collect else None)
 
-    summary = agg.summary()
-    summary["tasks_leftover"] = int(sum(len(l["arr_time"])
-                                        for l in leftovers))
-    summary["num_streams"] = B
-    summary["window_tasks"] = K
-    return StreamResult(summary=summary, per_window=per_window,
-                        aggregator=agg, final_carry=carry)
+    # ------------------------------------------------------------------
+    def backlog(self) -> int:
+        """Tasks currently waiting across all streams (pre-shedding)."""
+        return int(sum(len(l["arr_time"]) for l in self.leftovers))
+
+    def result(self, transitions: Optional[List[Transitions]] = None
+               ) -> StreamResult:
+        summary = self.agg.summary()
+        summary["tasks_leftover"] = self.backlog()
+        summary["num_streams"] = self.B
+        summary["window_tasks"] = self.K
+        return StreamResult(summary=summary, per_window=self.per_window,
+                            aggregator=self.agg, final_carry=self.carry,
+                            transitions=transitions)
+
+
+# ----------------------------------------------------------------------
+def run_stream(ecfg: EV.EnvConfig, policy, params, source, key,
+               scfg: StreamConfig = StreamConfig(),
+               rollout_fn=None, collect: bool = False) -> StreamResult:
+    """Drive `num_windows` windows of K = ecfg.max_tasks tasks per stream.
+
+    A thin loop over `StreamRunner.run_window`; see that class for the seam
+    and PRNG-key semantics. Device memory is O(B * K) regardless of the
+    horizon (`collect=True` additionally returns each window's stacked
+    (B, T, ...) transitions, so memory grows with `num_windows` — training
+    consumers that need bounded memory drive `StreamRunner` directly and
+    drain each window into their replay buffer / GAE pool).
+    """
+    runner = StreamRunner(ecfg, policy, params, source, key, scfg,
+                          rollout_fn=rollout_fn)
+    collected: Optional[List[Transitions]] = [] if collect else None
+    for _ in range(scfg.num_windows):
+        wres = runner.run_window(collect=collect)
+        if collect:
+            collected.append(wres.transitions)
+    return runner.result(transitions=collected)

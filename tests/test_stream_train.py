@@ -1,0 +1,295 @@
+"""Streaming training subsystem (`repro.training.stream_train`) and its
+satellite bugfixes: bitwise collection parity between a single-window
+stream and episodic `collect_batch` on every execution backend, the cached
+jitted env step (compile-count regression), host-RNG decoupling from the
+network-init seed, drop-aware shed accounting, the curriculum task source,
+and SAC/PPO stream-training smoke runs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExecSpec, Simulator, WorkloadSpec, rollout_fn_for
+from repro.core import agent as AG
+from repro.core import ppo as PPO
+from repro.core import rollout as RO
+from repro.core import sac as SAC
+from repro.core.env import EnvConfig
+from repro.core.replay import ReplayBuffer
+from repro.core.scenarios import (Scenario, curriculum_picker,
+                                  training_curriculum)
+from repro.core.workload import TraceConfig, make_trace_batch
+from repro.traffic import (CurriculumTaskSource, PoissonArrivals,
+                           ProcessTaskSource, StreamConfig, StreamRunner,
+                           TraceTaskSource, run_stream, scale_rate)
+from repro.training import stream_train as ST
+
+ECFG = EnvConfig(num_servers=4, max_tasks=8, queue_window=4, max_steps=32)
+TC = TraceConfig(num_tasks=8, arrival_rate=0.05, max_servers=4)
+ACFG = AG.AgentConfig(variant="eat-da", T=2)
+
+
+def _buffer_arrays(buf, n):
+    return (buf.obs[:n], buf.action[:n], buf.reward[:n], buf.next_obs[:n],
+            buf.done[:n])
+
+
+# ------------------------------------------------- collection parity
+@pytest.mark.parametrize("backend", ["reference", "fused", "sharded"])
+def test_single_window_collection_matches_episodic(backend):
+    """A one-window stream collection from a fresh carry pushes bitwise-
+    identical replay-buffer transitions to episodic `collect_batch` on the
+    same traces — on every execution backend (the stream derives window 0's
+    keys as split(fold_in(key, 0), B), which the episodic reference
+    reproduces explicitly)."""
+    B = 4
+    key = jax.random.PRNGKey(3)
+    traces = make_trace_batch(jax.random.PRNGKey(1), TC, B)
+    actor = SAC.init_train_state(jax.random.PRNGKey(2), ECFG, ACFG).actor
+    spec = ExecSpec(backend=backend)
+
+    buf_ep = ReplayBuffer(4096, ECFG.obs_shape, ECFG.action_dim)
+    ep_keys = jax.random.split(jax.random.fold_in(key, 0), B)
+    _, n_ep = SAC.collect_batch(ECFG, ACFG, actor, traces, ep_keys, buf_ep,
+                                exec_spec=spec)
+
+    buf_st = ReplayBuffer(4096, ECFG.obs_shape, ECFG.action_dim)
+    runner = StreamRunner(
+        ECFG, SAC.actor_policy(ECFG, ACFG), actor,
+        TraceTaskSource(jax.tree_util.tree_map(np.asarray, traces)), key,
+        StreamConfig(num_windows=1, num_streams=B,
+                     max_steps_per_window=ECFG.max_steps),
+        rollout_fn=rollout_fn_for(spec))
+    wres = runner.run_window(collect=True)
+    n_st = SAC.push_transitions(buf_st, wres.transitions)
+
+    assert n_ep == n_st > 0
+    for a, b in zip(_buffer_arrays(buf_ep, n_ep), _buffer_arrays(buf_st, n_st)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_collection_identical_across_backends():
+    """The flattened window transitions are bitwise-identical between the
+    reference, fused, and sharded backends."""
+    B = 4
+    flats = {}
+    for backend in ("reference", "fused", "sharded"):
+        src = ProcessTaskSource(PoissonArrivals(0.3), TC,
+                                jax.random.PRNGKey(5), num_streams=B)
+        runner = StreamRunner(ECFG, SAC.warmup_policy(ECFG), {}, src,
+                              jax.random.PRNGKey(6),
+                              StreamConfig(num_windows=2, num_streams=B),
+                              rollout_fn=rollout_fn_for(
+                                  ExecSpec(backend=backend)))
+        flats[backend] = [SAC.flatten_valid_transitions(
+            runner.run_window(collect=True).transitions) for _ in range(2)]
+    for backend in ("fused", "sharded"):
+        for fa, fb in zip(flats["reference"], flats[backend]):
+            for a, b in zip(fa, fb):
+                np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------- jit-cache regression
+def test_env_step_compiles_once_across_traces():
+    """`seed_with_demonstrations` / `run_episode` share one compiled env
+    step per (ecfg, shape): the trace is a traced argument, not a closure
+    constant (the old code compiled a fresh program every episode)."""
+    from repro.core.workload import make_trace
+    SAC._jit_env_step.clear_cache()
+    buf = ReplayBuffer(4096, ECFG.obs_shape, ECFG.action_dim)
+    SAC.seed_with_demonstrations(buf, ECFG, lambda k: make_trace(k, TC),
+                                 jax.random.PRNGKey(0), episodes=3)
+    assert SAC._jit_env_step._cache_size() == 1
+    actor = SAC.init_train_state(jax.random.PRNGKey(1), ECFG, ACFG).actor
+    SAC.run_episode(ECFG, make_trace(jax.random.PRNGKey(2), TC), actor,
+                    ACFG, jax.random.PRNGKey(3))
+    assert SAC._jit_env_step._cache_size() == 1
+
+
+# ------------------------------------------------- host-RNG decoupling
+def test_host_rng_decoupled_from_seed():
+    """The training host RNG must not mirror np.random.default_rng(seed)
+    (which would couple curriculum-cell sampling to the PRNGKey(seed)
+    network init), and distinct seeds must give distinct streams."""
+    draws = lambda rng: rng.integers(0, 1000, size=16).tolist()  # noqa: E731
+    host0 = draws(SAC.host_rng(jax.random.PRNGKey(0)))
+    assert host0 != draws(np.random.default_rng(0))
+    assert host0 != draws(SAC.host_rng(jax.random.PRNGKey(1)))
+    assert host0 == draws(SAC.host_rng(jax.random.PRNGKey(0)))  # reproducible
+
+
+def test_distinct_seeds_give_distinct_curriculum_sequences():
+    cells = training_curriculum(ECFG)
+    def seq(seed):
+        pick = curriculum_picker(ECFG, cells)
+        rng = SAC.host_rng(jax.random.PRNGKey(seed))
+        return [pick(rng)[0] for _ in range(24)]
+    assert seq(0) != seq(1)
+
+
+# ------------------------------------------------- shed accounting
+def test_forced_shedding_accounting():
+    """With max_carry forced low under overload, shed tasks must appear in
+    conservation, drop_rate, and the drop-inclusive violation/goodput
+    rates."""
+    src = ProcessTaskSource(PoissonArrivals(0.8), TC, jax.random.PRNGKey(7),
+                            num_streams=2)
+    # overload + a step budget too small to drain the window: backlog grows
+    # past max_carry=1 every seam, forcing the shed path
+    res = run_stream(ECFG, RO.uniform_policy(ECFG), {}, src,
+                     jax.random.PRNGKey(8),
+                     StreamConfig(num_windows=6, num_streams=2, max_carry=1,
+                                  max_steps_per_window=10))
+    s, t = res.summary, res.aggregator.totals
+    assert s["tasks_dropped"] > 0
+    assert (s["tasks_injected"]
+            == s["tasks_scheduled"] + s["tasks_dropped"]
+            + s["tasks_leftover"])
+    resolved = t["n_sched"] + t["n_dropped"]
+    assert s["tasks_resolved"] == resolved
+    assert s["drop_rate"] == pytest.approx(t["n_dropped"] / resolved)
+    # drops are QoS failures: the headline rate counts them...
+    assert s["qos_violation_rate"] == pytest.approx(
+        (t["n_viol"] + t["n_dropped"]) / resolved)
+    assert s["qos_violation_rate"] >= s["drop_rate"]
+    assert s["qos_violation_rate_latency"] >= s["drop_rate"]
+    # ...and served-within-QoS + violated partitions the resolved tasks
+    assert s["goodput_rate"] + s["qos_violation_rate"] == pytest.approx(1.0)
+    # the drop-exclusive view is still available
+    assert s["qos_violation_rate_scheduled"] == pytest.approx(
+        t["n_viol"] / t["n_sched"])
+    # per-window ledger: last window's backlog is carried or shed, and
+    # carried + injected fill exactly the window slots
+    for prev, w in zip(res.per_window, res.per_window[1:]):
+        assert prev["leftover"] == w["carried"] + w["dropped"]
+    for w in res.per_window:
+        assert w["carried"] + w["injected"] == 2 * ECFG.max_tasks
+
+
+# ------------------------------------------------- curriculum source
+def test_curriculum_source_switches_cells_on_shared_clock():
+    fast, slow = PoissonArrivals(20.0), PoissonArrivals(0.02)
+    src = CurriculumTaskSource([(fast, TC), (slow, TC)],
+                               jax.random.PRNGKey(9), num_streams=1,
+                               chunk_size=64)
+    a = src.take(0, 64)["arr_time"]
+    src.set_cell(1)
+    b = src.take(0, 64)["arr_time"]
+    both = np.concatenate([a, b])
+    assert (np.diff(both) >= 0).all()          # one continuous clock
+    assert np.diff(b).mean() > 20 * np.diff(a).mean()
+    with pytest.raises(ValueError):
+        src.set_cell(2)
+    with pytest.raises(ValueError):
+        CurriculumTaskSource([], jax.random.PRNGKey(0))
+
+
+def test_scale_rate_scales_intensity():
+    assert scale_rate(PoissonArrivals(0.1), 2.0).rate == pytest.approx(0.2)
+    assert scale_rate(PoissonArrivals(0.1), 1.0).rate == pytest.approx(0.1)
+    from repro.traffic import FlashCrowdArrivals, MMPPArrivals
+    m = scale_rate(MMPPArrivals(rates=(0.02, 0.3)), 3.0)
+    assert m.rates == pytest.approx((0.06, 0.9))
+    f = scale_rate(FlashCrowdArrivals(base_rate=0.05, spike_rate=0.5), 2.0)
+    assert (f.base_rate, f.spike_rate) == pytest.approx((0.1, 1.0))
+    with pytest.raises(ValueError):
+        scale_rate(PoissonArrivals(0.1), -1.0)
+
+
+def test_resolve_cells_validates_ecfg():
+    other = EnvConfig(num_servers=8, max_tasks=8, queue_window=4)
+    with pytest.raises(ValueError):
+        ST.resolve_cells(ECFG, None, training_curriculum(other))
+    cells = ST.resolve_cells(ECFG, None, training_curriculum(ECFG),
+                             rate_scale=2.0)
+    assert len(cells) >= 4
+    names = [n for n, _, _ in cells]
+    assert "coldstart" in names and "bursty" in names
+
+
+# ------------------------------------------------- trainers
+def test_stream_train_config_validation():
+    with pytest.raises(ValueError):
+        ST.StreamTrainConfig(windows_per_round=0)
+    with pytest.raises(ValueError):
+        ST.StreamTrainConfig(streams=0)
+    with pytest.raises(ValueError):
+        ST.StreamTrainConfig(rate_scale=0.0)
+    with pytest.raises(ValueError):
+        ST.StreamTrainConfig(rounds=-1)
+    assert ST.StreamTrainConfig(rounds=0).rounds == 0   # bench round-0 probe
+
+
+def test_train_stream_sac_smoke():
+    stcfg = ST.StreamTrainConfig(rounds=3, streams=2, rate_scale=2.0,
+                                 max_updates_per_round=1)
+    scfg = SAC.SACConfig(warmup_steps=16, batch_size=32)
+    res = ST.train_stream_sac(ECFG, ACFG, scfg, stcfg, seed=0)
+    assert len(res.history) == 3
+    for row in res.history:
+        assert np.isfinite(row["episode_return_mean"])
+        for k in ST.QOS_KEYS:
+            assert k in row
+    assert res.history[-1]["buffer_size"] > 0
+    assert res.history[-1]["updates"] >= 1          # past warmup, trained
+    assert res.stream.summary["tasks_injected"] > 0
+
+
+def test_train_stream_sac_curriculum_cells():
+    cells = training_curriculum(ECFG)
+    stcfg = ST.StreamTrainConfig(rounds=4, streams=2,
+                                 max_updates_per_round=0)
+    scfg = SAC.SACConfig(warmup_steps=100_000)      # collect-only
+    res = ST.train_stream_sac(ECFG, ACFG, scfg, stcfg, curriculum=cells,
+                              seed=1)
+    names = {n for n, _, _ in ST.resolve_cells(ECFG, None, cells)}
+    assert {row["cell"] for row in res.history} <= names
+    assert all(row["warmup"] for row in res.history)
+
+
+def test_pool_gae_seam_bootstrap_survives_window_done():
+    """Providing `last_values` marks the row's end as a window-seam
+    truncation: the env's done flag on the final valid step (raised when
+    the window drains or hits its budget) must NOT zero the critic
+    bootstrap."""
+    T, gamma = 3, 0.9
+    pcfg = PPO.PPOConfig(gamma=gamma, gae_lambda=1.0)
+    ones = np.ones((1, T), np.float32)
+    tr = RO.Transitions(
+        obs=np.zeros((1, T, 3, 8), np.float32),
+        action=np.zeros((1, T, 6), np.float32),
+        reward=ones.copy(),
+        next_obs=np.zeros((1, T, 3, 8), np.float32),
+        done=np.asarray([[0.0, 0.0, 1.0]], np.float32),   # env done at seam
+        valid=np.ones((1, T), bool),
+        extras={"agent_action": np.zeros((1, T, 6), np.float32),
+                "logp": ones.copy(),
+                "value": 0.5 * ones.copy()})
+    term = PPO.pool_gae(tr, pcfg)                          # terminal: no boot
+    seam = PPO.pool_gae(tr, pcfg, last_values=np.asarray([2.0]))
+    assert seam["ret"][-1] == pytest.approx(term["ret"][-1] + gamma * 2.0)
+
+
+def test_train_stream_ppo_smoke():
+    stcfg = ST.StreamTrainConfig(rounds=2, streams=2)
+    res = ST.train_stream_ppo(ECFG, PPO.PPOConfig(epochs=1, minibatches=2),
+                              stcfg, seed=0)
+    assert len(res.history) == 2
+    assert all(np.isfinite(r["episode_return_mean"]) for r in res.history)
+    assert res.history[0]["transitions"] > 0
+
+
+# ------------------------------------------------- api passthrough
+def test_workloadspec_streaming_collect_returns_transitions():
+    cell = Scenario(name="collect-cell", ecfg=ECFG, tcfg=TC)
+    sim = Simulator(WorkloadSpec.streaming(cell, streams=2, num_windows=3,
+                                           collect=True))
+    res = sim.run("random", jax.random.PRNGKey(0))
+    tr = res.raw.transitions
+    assert isinstance(tr, list) and len(tr) == 3
+    for w in tr:
+        assert w.obs.shape[0] == 2                  # (B, T, ...) per window
+        assert w.valid.shape == w.reward.shape
+    # collect off (the default) keeps the result lean
+    lean = Simulator(WorkloadSpec.streaming(cell, streams=2, num_windows=1))
+    assert lean.run("random", jax.random.PRNGKey(0)).raw.transitions is None
