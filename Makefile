@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-all test-sharded train-stream-smoke bench-rollout bench-traffic bench-env-step bench-sharded-rollout bench-stream-train traffic-sweep
+.PHONY: test test-all test-sharded train-stream-smoke serve-smoke bench-rollout bench-traffic bench-env-step bench-sharded-rollout bench-stream-train bench-serving traffic-sweep
 
 test-sharded:    ## api backend + stream-training parity under 8 forced host devices
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 $(PY) -m pytest tests/test_api.py tests/test_stream_train.py -q
@@ -21,8 +21,15 @@ train-stream-smoke:  ## few-window streaming-training smoke (tiny nets), fused t
 	  --window-tasks 8 --servers 4 --variant eat-da --diffusion-steps 2 \
 	  --warmup-steps 32 --max-updates-per-round 2 --rate-scale 2.0
 
+serve-smoke:     ## short Poisson stream on the real serving backend (tiny reduced model, virtual time)
+	$(PY) examples/serve_stream.py --policy greedy --windows 2 \
+	  --window-tasks 8 --servers 4 --archs tinyllama-1.1b
+
 bench-stream-train:  ## stream-training throughput fused vs sharded -> BENCH_stream_train.json
 	$(PY) benchmarks/bench_stream_train.py
+
+bench-serving:   ## stream-trained EAT vs baselines on the real cluster -> BENCH_serving.json
+	$(PY) benchmarks/bench_serving.py
 
 bench-rollout:   ## batched-rollout engine vs host-loop evaluator
 	$(PY) benchmarks/bench_batch_rollout.py

@@ -104,13 +104,13 @@ def main():
                   f"reused={done.reused} resp={done.finish_t - done.arrive_t:7.1f}s "
                   f"tokens={done.tokens[:4]}...")
 
-    m = eng.metrics()
+    m = eng.qos_summary()
     print(f"\npolicy={args.policy} servers={args.servers}: "
-          f"completed {m['completed']}/{args.tasks}, "
-          f"avg response {m['avg_response']:.1f}s, "
+          f"scheduled {m['tasks_scheduled']}/{args.tasks}, "
+          f"latency p50/p95 {m['latency_p50']:.1f}/{m['latency_p95']:.1f}s, "
           f"quality {m['avg_quality']:.3f}, "
-          f"reload rate {m['reload_rate']:.2f} "
-          f"({m['loads']} loads, {m['reuses']} reuses)")
+          f"cold-start rate {m['cold_start_rate']:.2f} "
+          f"({m['model_loads']} loads, {m['model_reuses']} reuses)")
 
 
 if __name__ == "__main__":

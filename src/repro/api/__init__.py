@@ -25,12 +25,13 @@ from repro.api.registry import (ResolvedPolicy, UntrainedPolicyWarning,
                                 resolve)
 from repro.api.simulator import (SimResult, Simulator, evaluate_batch,
                                  resolve_cell)
-from repro.api.specs import (BACKENDS, MODES, ExecSpec, PolicySpec,
-                             WorkloadSpec)
+from repro.api.specs import (BACKENDS, MODES, SIM_BACKENDS, ExecSpec,
+                             PolicySpec, WorkloadSpec)
 
 __all__ = [
     "Simulator", "SimResult", "evaluate_batch", "resolve_cell",
-    "PolicySpec", "WorkloadSpec", "ExecSpec", "BACKENDS", "MODES",
+    "PolicySpec", "WorkloadSpec", "ExecSpec", "BACKENDS", "SIM_BACKENDS",
+    "MODES",
     "ResolvedPolicy", "UntrainedPolicyWarning", "available_policies",
     "policy_kind", "register", "resolve",
     "rollout_fn_for", "resolve_shards", "device_count",

@@ -20,6 +20,14 @@ and training collection all swap engines through one seam:
   per-row math independent of the local batch size), so results are
   bitwise-identical to ``fused`` — CI asserts this under
   XLA_FLAGS=--xla_force_host_platform_device_count=8.
+* ``serving`` — the real serving cluster (`repro.serving.backend`): one
+  physical pool (batch must be 1) whose scheduler state is a mirror
+  `EnvState` advanced by the shared decision step, with real weight loads
+  and patch-parallel prefill/decode per scheduled task. Virtual time is
+  bitwise-identical to ``fused``; wall-clock mode patches measured
+  latencies back into rewards and observations. The returned callable is
+  STATEFUL (the pool persists across calls — that is the point); build one
+  per consumer via `rollout_fn_for` and `reset()` it between runs.
 
 Compiled sharded programs are cached per (ecfg, policy, step budget, mesh)
 — the streaming engine reuses one program across all its windows.
@@ -93,6 +101,13 @@ def rollout_fn_for(spec: ExecSpec = ExecSpec()):
     if spec.backend not in BACKENDS:
         raise ValueError(
             f"backend must be one of {BACKENDS}, got {spec.backend!r}")
+
+    if spec.backend == "serving":
+        # lazy: the serving stack (model zoo, executor) is heavy and only
+        # needed when actually serving. Fresh state per resolution — each
+        # consumer owns its own pool, persistent across its windows/rounds.
+        from repro.serving.backend import serving_rollout
+        return serving_rollout(spec)
 
     if spec.backend in ("reference", "fused"):
         fused = spec.backend == "fused"

@@ -87,6 +87,11 @@ class Simulator:
         else:
             self.ecfg, self.tcfg = workload.scenario.ecfg, workload.scenario.tcfg
             self.process = workload.scenario.arrival
+        if exec_spec.backend == "serving" and workload.batch != 1:
+            raise ValueError(
+                "serving backend runs ONE physical cluster; build the "
+                "workload with batch/streams=1, got "
+                f"{workload.batch}")
         self._rollout = BK.rollout_fn_for(exec_spec)
 
     # -- policy resolution against this workload's env ------------------
@@ -103,6 +108,10 @@ class Simulator:
     # -- runs ------------------------------------------------------------
     def run(self, policy: PolicyLike, key) -> SimResult:
         rp = self.resolve(policy)
+        if hasattr(self._rollout, "reset"):
+            self._rollout.reset()    # serving: fresh cluster per run, so a
+            #                          sweep's policies never inherit a warm
+            #                          pool from the previous policy
         t0 = time.perf_counter()
         if self.workload.mode == "episodic":
             res = self._run_episodic(rp, key)
@@ -147,6 +156,9 @@ class Simulator:
         summary = dict(res.summary)
         summary["arrival"] = type(self.process).__name__
         summary["num_servers"] = self.ecfg.num_servers
+        if self.exec_spec.backend == "serving":
+            summary.update(self._rollout.serving_stats())
+            summary["wall_clock"] = self.exec_spec.serving_wall_clock
         return SimResult(policy=rp.name, trained=rp.trained, kind=rp.kind,
                          mode="streaming", backend=self.exec_spec.backend,
                          scenario=self.scenario.name, summary=summary,

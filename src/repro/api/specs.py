@@ -9,8 +9,10 @@ One simulation = (what schedules) x (what arrives) x (how it executes):
                    built from a `core.scenarios.Scenario` cell.
     ExecSpec     — which execution backend runs the batched rollout:
                    "reference" (legacy vmap-of-scans engine), "fused"
-                   (fused env-step op, the default), or "sharded" (the
-                   fused program shard_map'd over a device mesh).
+                   (fused env-step op, the default), "sharded" (the
+                   fused program shard_map'd over a device mesh), or
+                   "serving" (the real serving cluster: one physical
+                   pool running actual model prefill/decode).
 
 `Simulator(workload, exec_spec).run(policy_spec, key)` is the single door;
 every spec is data, so a sweep is a list of specs, not a bespoke loop.
@@ -22,7 +24,11 @@ from typing import Any, Mapping, Optional
 
 from repro.core.scenarios import Scenario
 
-BACKENDS = ("reference", "fused", "sharded")
+BACKENDS = ("reference", "fused", "sharded", "serving")
+#: batch-parallel simulated backends — "serving" drives ONE physical
+#: cluster (batch/streams must be 1), so sweeps over arbitrary batch
+#: sizes should iterate these instead of BACKENDS.
+SIM_BACKENDS = ("reference", "fused", "sharded")
 MODES = ("episodic", "streaming")
 
 
@@ -115,11 +121,31 @@ class ExecSpec:
       splits over `mesh_devices` devices (0 = all local devices; degraded
       to gcd(batch, devices) when the batch does not divide). Bitwise-
       identical to "fused" on the same inputs.
+    * ``backend="serving"``: the real serving cluster
+      (`repro.serving.backend.ServingRollout`) — ONE physical pool
+      (batch/streams must be 1) running actual weight loads and
+      patch-parallel prefill/decode per scheduled task. In virtual time
+      (``serving_wall_clock=False``, default) the decision process is
+      bitwise-identical to "fused"; with ``serving_wall_clock=True``
+      measured execution seconds feed latencies, rewards, and
+      observations (the sim-to-real loop).
+
+    Serving knobs (`serving_*`) are ignored by the simulated backends.
+    `serving_archs=()` resolves to `common.config.ASSIGNED_ARCHS`;
+    `serving_execute=False` skips real model execution (pure-mirror mode
+    for fast parity checks — pool economics still accrue).
     """
     backend: str = "fused"
     fused_impl: str = "auto"       # fused/sharded: "auto" | "ref" | "pallas"
     mesh_devices: int = 0          # sharded: devices on the mesh (0 = all)
     mesh_axis: str = "data"        # sharded: mesh axis name
+    serving_archs: tuple = ()      # serving: model zoo archs (by env model id)
+    serving_reduced: bool = True   # serving: reduced-config real models
+    serving_wall_clock: bool = False   # serving: measured latencies feed MDP
+    serving_execute: bool = True   # serving: run real prefill/decode
+    serving_prompt_len: int = 8    # serving: synthetic prompt tokens
+    serving_max_new_tokens: int = 16   # serving: request decode budget
+    serving_seed: int = 0          # serving: prompt/weight-init PRNG seed
 
     def __post_init__(self):
         if self.backend not in BACKENDS:

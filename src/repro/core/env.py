@@ -33,8 +33,11 @@ import jax.numpy as jnp
 
 from repro.core import quality as Q
 from repro.core import timemodel as TM
-
-INF = jnp.float32(1e30)
+# The Eq.-6 observation path lives in `core.obs` (shared verbatim with the
+# real-model serving engine, which observes a pool-derived state mirror);
+# re-exported here so every existing `EV.observe_from` consumer — including
+# the bitwise-parity-tested fused/Pallas engines — keeps one import path.
+from repro.core.obs import INF, QueueView, observe_from, visible_queue
 
 
 def _pin(x):
@@ -125,50 +128,6 @@ def reset(cfg: EnvConfig) -> EnvState:
 
 
 # ----------------------------------------------------------------------
-class QueueView(NamedTuple):
-    """One per-decision visible-queue top-k, threaded through the rollout so
-    each decision computes it once (step + next observation share it)."""
-    idx: jnp.ndarray     # (l,) i32 task ids, arrival order
-    valid: jnp.ndarray   # (l,) bool slot holds a queued task
-    queued: jnp.ndarray  # (K,) bool arrived & unscheduled
-
-
-def visible_queue(cfg: EnvConfig, trace: Dict, state: EnvState) -> QueueView:
-    """Indices of the l earliest queued (arrived & unscheduled) tasks."""
-    queued = (state.task_status == 0) & (trace["arr_time"] <= state.time)
-    prio = jnp.where(queued, trace["arr_time"], INF)
-    neg, idx = jax.lax.top_k(-prio, cfg.queue_window)
-    valid = -neg < INF
-    return QueueView(idx=idx, valid=valid, queued=queued)
-
-
-def observe_from(cfg: EnvConfig, trace: Dict, state: EnvState,
-                 q: QueueView) -> jnp.ndarray:
-    """Eq.-6 state matrix from an already-computed queue view.
-
-    Scaling uses reciprocal multiplies, not divisions: LLVM rewrites
-    division by a constant into multiply-by-reciprocal per fusion context,
-    which would put the episodic and fused engines 1 ulp apart."""
-    t = state.time
-    idx, valid = q.idx, q.valid
-    inv_ts = 1.0 / cfg.time_scale
-    inv_nm = 1.0 / max(cfg.num_models, 1)
-    avail = (state.server_free_at <= t).astype(jnp.float32)
-    remaining = jnp.maximum(state.server_free_at - t, 0.0) * inv_ts
-    model = (state.server_model.astype(jnp.float32) + 1.0) * inv_nm
-    wait = jnp.where(valid, (t - trace["arr_time"][idx]) * inv_ts, 0.0)
-    c = jnp.where(valid, trace["c"][idx].astype(jnp.float32) / 8.0, 0.0)
-    if cfg.num_models > 1:
-        mrow = jnp.where(valid, (trace["model"][idx].astype(jnp.float32) + 1.0)
-                         * inv_nm, 0.0)
-    else:
-        mrow = jnp.zeros_like(c)   # paper zero-pads this row
-    row0 = jnp.concatenate([avail, wait])
-    row1 = jnp.concatenate([remaining, c])
-    row2 = jnp.concatenate([model, mrow])
-    return jnp.stack([row0, row1, row2])
-
-
 def observe(cfg: EnvConfig, trace: Dict, state: EnvState) -> jnp.ndarray:
     """Eq.-6 state matrix, normalised."""
     return observe_from(cfg, trace, state, visible_queue(cfg, trace, state))

@@ -1,0 +1,68 @@
+"""The one Eq.-6 observation path shared by simulation and serving.
+
+Every consumer that builds the paper's 3 x (E + l) state matrix — the
+episodic/fused/sharded rollout engines (`core.env`), the Pallas env-step
+reference, and the real-model serving engine (`repro.serving`, which derives
+an `EnvState` mirror from live pool state) — normalises through these
+functions, so simulated observations and pool-derived observations are the
+*same array* on matched state (tests/test_serving.py pins this).
+
+The math is bitwise-armored: scaling uses reciprocal multiplies, not
+divisions, because LLVM rewrites division by a constant into
+multiply-by-reciprocal per fusion context, which would put differently
+compiled engines 1 ulp apart (see `env._pin`).
+
+Functions are duck-typed over (cfg, trace, state) so this module imports
+neither `env` (which imports it) nor anything heavier than jax.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(1e30)
+
+
+class QueueView(NamedTuple):
+    """One per-decision visible-queue top-k, threaded through the rollout so
+    each decision computes it once (step + next observation share it)."""
+    idx: jnp.ndarray     # (l,) i32 task ids, arrival order
+    valid: jnp.ndarray   # (l,) bool slot holds a queued task
+    queued: jnp.ndarray  # (K,) bool arrived & unscheduled
+
+
+def visible_queue(cfg, trace: Dict, state) -> QueueView:
+    """Indices of the l earliest queued (arrived & unscheduled) tasks."""
+    queued = (state.task_status == 0) & (trace["arr_time"] <= state.time)
+    prio = jnp.where(queued, trace["arr_time"], INF)
+    neg, idx = jax.lax.top_k(-prio, cfg.queue_window)
+    valid = -neg < INF
+    return QueueView(idx=idx, valid=valid, queued=queued)
+
+
+def observe_from(cfg, trace: Dict, state, q: QueueView) -> jnp.ndarray:
+    """Eq.-6 state matrix from an already-computed queue view.
+
+    Scaling uses reciprocal multiplies, not divisions: LLVM rewrites
+    division by a constant into multiply-by-reciprocal per fusion context,
+    which would put the episodic and fused engines 1 ulp apart."""
+    t = state.time
+    idx, valid = q.idx, q.valid
+    inv_ts = 1.0 / cfg.time_scale
+    inv_nm = 1.0 / max(cfg.num_models, 1)
+    avail = (state.server_free_at <= t).astype(jnp.float32)
+    remaining = jnp.maximum(state.server_free_at - t, 0.0) * inv_ts
+    model = (state.server_model.astype(jnp.float32) + 1.0) * inv_nm
+    wait = jnp.where(valid, (t - trace["arr_time"][idx]) * inv_ts, 0.0)
+    c = jnp.where(valid, trace["c"][idx].astype(jnp.float32) / 8.0, 0.0)
+    if cfg.num_models > 1:
+        mrow = jnp.where(valid, (trace["model"][idx].astype(jnp.float32) + 1.0)
+                         * inv_nm, 0.0)
+    else:
+        mrow = jnp.zeros_like(c)   # paper zero-pads this row
+    row0 = jnp.concatenate([avail, wait])
+    row1 = jnp.concatenate([remaining, c])
+    row2 = jnp.concatenate([model, mrow])
+    return jnp.stack([row0, row1, row2])

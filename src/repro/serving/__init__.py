@@ -1,0 +1,15 @@
+"""Real model serving: pool + executor + engine, and the serving execution
+backend that plugs the physical cluster into the unified `repro.api` stack
+(`ExecSpec(backend="serving")`)."""
+from repro.serving.backend import ServingRollout, serving_rollout  # noqa: F401
+from repro.serving.engine import Request, ServingEngine            # noqa: F401
+from repro.serving.executor import ModelExecutor, chunkable        # noqa: F401
+from repro.serving.pool import LogicalServer, ServerPool           # noqa: F401
+from repro.serving.runner import (                                  # noqa: F401
+    ServingStreamRunner, serve_stream)
+
+__all__ = [
+    "Request", "ServingEngine", "ServerPool", "LogicalServer",
+    "ModelExecutor", "chunkable", "ServingRollout", "serving_rollout",
+    "ServingStreamRunner", "serve_stream",
+]

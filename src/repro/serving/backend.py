@@ -1,0 +1,320 @@
+"""The serving execution backend: real model execution behind the
+`batch_rollout` calling convention.
+
+`ServingRollout` is a stateful callable with the unified backend signature
+
+    fn(ecfg, traces, policy, params, keys, *,
+       num_steps=None, collect=False, init_state=None) -> RolloutResult
+
+so `Simulator(ExecSpec(backend="serving"))`, `StreamRunner(rollout_fn=...)`
+and `train_stream_sac(exec_spec=...)` all drive a real serving cluster
+through the exact seam the simulated engines use. One constraint: the batch
+axis is 1 — there is one physical pool, not B parallel universes.
+
+Design: the scheduler's view of the cluster is a *mirror* `EnvState`
+advanced by the shared, parity-tested `env.step_with_queue` — gang
+selection, reuse detection, reward shaping, and the Eq.-6 observation are
+therefore byte-for-byte the simulator's. The pool (`serving.pool`) holds the
+real per-server weights and the load/reuse ledger; the executor
+(`serving.executor`) runs real patch-parallel prefill + decode for every
+scheduled task. Two time modes:
+
+* virtual (``serving_wall_clock=False``): latencies stay on the Table-VI
+  model inside the decision step, so the whole rollout — final state,
+  rewards, collected transitions — is bitwise-identical to the fused
+  simulator on the same (trace, policy, key). This is the seam test: real
+  execution rides along without perturbing the MDP.
+* wall-clock (``serving_wall_clock=True``): each scheduled task's measured
+  execution seconds are patched back into the mirror (`server_free_at`,
+  `task_finish`), the reward is recomputed from the *measured* t_resp
+  (Eq. 4a), and the next observation/queue derive from the patched state —
+  the sim-to-real loop closes: `train_stream_sac` fine-tunes on measured
+  latencies, and `StreamAggregator` rows report wall-clock QoS.
+
+PRNG, freeze-after-done, and transition layout follow `rollout_episode`
+exactly (one `split` per decision; post-done steps replay the frozen state),
+so `sac.flatten_valid_transitions` consumes serving-collected windows
+unchanged — asserted by tests/test_serving_backend.py.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ASSIGNED_ARCHS
+from repro.core import env as EV
+from repro.core import obs as OBS
+from repro.core import quality as Q
+from repro.core.rollout import RolloutResult, Transitions
+from repro.serving.executor import ModelExecutor
+from repro.serving.pool import ServerPool
+
+
+@functools.lru_cache(maxsize=None)
+def _decide_prog(ecfg: EV.EnvConfig, policy):
+    """One jitted program per (ecfg, policy): key split + policy + env step —
+    the same op sequence as one `rollout_episode` scan iteration, so the
+    virtual-time mirror reproduces the simulated rollout bitwise."""
+    @jax.jit
+    def decide(trace, state, q, obs, key, params):
+        key, k_act = jax.random.split(key)
+        action, extras = policy(params, k_act, trace, state, obs)
+        nstate, nq, nobs, r, d, info = EV.step_with_queue(
+            ecfg, trace, state, q, action)
+        return key, action, extras, nstate, nq, nobs, r, d, info
+    return decide
+
+
+@functools.lru_cache(maxsize=None)
+def _wall_patch_prog(ecfg: EV.EnvConfig):
+    """Patch a just-scheduled decision with its measured busy seconds:
+    rewrite the gang's `server_free_at` and the task's finish time, recompute
+    the reward from the measured t_resp (Eq. 4a; t_avg comes from the same
+    pre-step queue view the virtual reward used), re-evaluate done, and
+    rebuild the queue/observation from the patched state."""
+    @jax.jit
+    def patch(trace, q_pre, nstate, k, sel, busy):
+        t = nstate.time                      # scheduling never moves time
+        finish = t + busy
+        st = nstate._replace(
+            server_free_at=jnp.where(sel, finish, nstate.server_free_at),
+            task_finish=nstate.task_finish.at[k].set(finish))
+        q_k = st.task_quality[k]
+        pen = Q.quality_penalty(q_k, ecfg.q_min, ecfg.p_quality)
+        t_resp = finish - trace["arr_time"][k]
+        still = q_pre.queued & (jnp.arange(ecfg.max_tasks) != k)
+        n_q = jnp.maximum(jnp.sum(still.astype(jnp.float32)), 1.0)
+        t_avg = jnp.sum(jnp.where(still, t - trace["arr_time"], 0.0)) / n_q
+        r = ecfg.alpha_q * q_k - ecfg.lambda_q * pen \
+            + ecfg.k_time / (ecfg.beta_t * t_resp + ecfg.mu_t * t_avg + 1e-3)
+        all_done = jnp.all((st.task_status == 2) |
+                           ((st.task_status == 1) & (st.task_finish <= t)))
+        d = all_done | (t >= ecfg.time_limit) | \
+            (st.steps_taken >= ecfg.max_steps)
+        q2 = OBS.visible_queue(ecfg, trace, st)
+        obs2 = OBS.observe_from(ecfg, trace, st, q2)
+        return st, q2, obs2, r, d
+    return patch
+
+
+@functools.lru_cache(maxsize=None)
+def _metrics_prog(ecfg: EV.EnvConfig):
+    return jax.jit(lambda trace, st: EV.episode_metrics(ecfg, trace, st))
+
+
+class ServingRollout:
+    """Stateful serving backend under the `batch_rollout` convention.
+
+    The pool (loaded weights, load/reuse counters) persists across calls —
+    across stream windows and training rounds, exactly like a long-lived
+    cluster. `reset()` drops every loaded model (the Simulator calls it at
+    the start of each `run`, so sweep policies never inherit a warm pool).
+    """
+
+    backend = "serving"
+
+    def __init__(self, num_servers: int, *, archs=(), reduced: bool = True,
+                 wall_clock: bool = False, execute: bool = True,
+                 prompt_len: int = 8, max_new_tokens: int = 16,
+                 seed: int = 0):
+        self.archs = tuple(archs) if archs else ASSIGNED_ARCHS
+        self.reduced = reduced
+        self.wall_clock = wall_clock
+        self.execute = execute
+        self.prompt_len = int(prompt_len)
+        self.max_new_tokens = int(max_new_tokens)
+        self.seed = int(seed)
+        self.pool = ServerPool(num_servers)
+        self.executor = ModelExecutor(reduced=reduced)
+        self.tasks_executed = 0
+        self.measured_busy: list = []       # wall seconds per executed task
+        self._load_key = jax.random.PRNGKey(seed)
+        self._prompt_rng = np.random.default_rng(seed)
+
+    # ------------------------------------------------------------------
+    def reset(self) -> None:
+        """Fresh cluster: unload every model, zero the ledgers."""
+        self.pool.reset()
+        self.tasks_executed = 0
+        self.measured_busy = []
+        self._load_key = jax.random.PRNGKey(self.seed)
+        self._prompt_rng = np.random.default_rng(self.seed)
+
+    def serving_stats(self) -> Dict[str, float]:
+        out = dict(self.pool.counters())
+        out["tasks_executed"] = self.tasks_executed
+        if self.measured_busy:
+            out["measured_busy_mean_s"] = float(np.mean(self.measured_busy))
+        return out
+
+    # ------------------------------------------------------------------
+    def _arch_of(self, m_k: int) -> str:
+        return self.archs[m_k % len(self.archs)]
+
+    def _run_task(self, m_k: int, c_k: int, steps: int, sel: np.ndarray,
+                  reuse: bool) -> float:
+        """Pool bookkeeping + real execution for one scheduled gang.
+        Returns measured wall seconds of the load + generate work."""
+        arch = self._arch_of(m_k)
+        gang = [self.pool.servers[i] for i in np.flatnonzero(sel)]
+        t0 = time.perf_counter()
+        if reuse:
+            self.pool.reuse_count += 1
+            leader = next((s for s in gang if s.params is not None), None)
+            if leader is None:                # defensive: mirror said reuse
+                leader = gang[0]              # but pool lost the weights
+                self._load(leader, arch)
+            for s in gang:
+                s.params, s.model_name = leader.params, leader.model_name
+        else:
+            self._load(gang[0], arch)
+            for s in gang[1:]:
+                # each member materialises the weights in the real system;
+                # the replicas are identical, so share the leader's array
+                s.params, s.model_name = gang[0].params, arch
+                self.pool.load_count += 1
+        if self.execute:
+            prompt = self._prompt_rng.integers(
+                0, self.executor.model(arch).cfg.vocab_size,
+                self.prompt_len, dtype=np.int64).astype(np.int32)
+            self.executor.generate(arch, gang[0].params, prompt, c_k, steps,
+                                   self.max_new_tokens)
+        self.tasks_executed += 1
+        return time.perf_counter() - t0
+
+    def _load(self, server, arch: str) -> None:
+        self._load_key, k = jax.random.split(self._load_key)
+        server.params = self.executor.init_params(arch, k)
+        server.model_name = arch
+        self.pool.load_count += 1
+
+    # ------------------------------------------------------------------
+    def __call__(self, ecfg: EV.EnvConfig, traces: Dict, policy, params,
+                 keys, *, num_steps: Optional[int] = None,
+                 collect: bool = False,
+                 init_state: Optional[EV.EnvState] = None) -> RolloutResult:
+        B = int(np.asarray(keys).shape[0])
+        if B != 1:
+            raise ValueError(
+                f"serving backend runs ONE physical cluster; got batch {B} "
+                "(build the workload with batch/streams=1)")
+        if ecfg.num_servers != len(self.pool.servers):
+            raise ValueError(
+                f"serving pool has {len(self.pool.servers)} servers but "
+                f"ecfg.num_servers={ecfg.num_servers}")
+        T = int(num_steps) if num_steps else ecfg.max_steps
+        trace = {k: v[0] for k, v in traces.items()}
+        key = keys[0]
+        state = (EV.reset(ecfg) if init_state is None
+                 else jax.tree_util.tree_map(lambda x: x[0], init_state))
+        q, obs = EV.reset_view(ecfg, trace, state)
+        decide = _decide_prog(ecfg, policy)
+        wall_patch = _wall_patch_prog(ecfg)
+
+        done = False
+        total = np.float32(0.0)
+        length = 0
+        rows = [] if collect else None
+        for _ in range(T):
+            key, action, extras, nstate, nq, nobs, r, d, info = decide(
+                trace, state, q, obs, key, params)
+            if not done and bool(info["scheduled"]):
+                k_task = info["task"]
+                sel = np.asarray(nstate.server_gang == k_task)
+                busy = self._run_task(
+                    int(trace["model"][k_task]), int(trace["c"][k_task]),
+                    int(info["steps"]), sel, bool(info["reuse"]))
+                if self.wall_clock:
+                    self.measured_busy.append(busy)
+                    nstate, nq, nobs, r, d = wall_patch(
+                        trace, q, nstate, k_task, jnp.asarray(sel),
+                        jnp.float32(busy))
+            if done:       # frozen episode: replay the carried state
+                nstate, nq, nobs = state, q, obs
+                r = jnp.float32(0.0)
+            if collect:
+                rows.append((obs, action, r, nobs, d, not done, extras))
+            total = total + np.float32(r)
+            length += 0 if done else 1
+            state, q, obs = nstate, nq, nobs
+            done = done or bool(d)
+            if done and not collect:
+                break
+
+        metrics = {k: np.asarray(v)[None] for k, v in
+                   _metrics_prog(ecfg)(trace, state).items()}
+        metrics["episode_return"] = np.asarray([total], np.float32)
+        metrics["episode_len"] = np.asarray([length], np.int32)
+        final_state = jax.tree_util.tree_map(
+            lambda x: jnp.asarray(x)[None], state)
+        transitions = self._stack(rows) if collect else None
+        return RolloutResult(metrics=metrics, final_state=final_state,
+                             transitions=transitions)
+
+    @staticmethod
+    def _stack(rows) -> Transitions:
+        """Host rows -> the (B=1, T, ...) layout every simulated backend
+        emits, so `sac.flatten_valid_transitions` consumes it unchanged."""
+        stk = lambda xs: np.stack([np.asarray(x) for x in xs])[None]  # noqa: E731
+        extras = {}
+        if rows and rows[0][6]:
+            extras = {k: stk([r[6][k] for r in rows]) for k in rows[0][6]}
+        return Transitions(
+            obs=stk([r[0] for r in rows]),
+            action=stk([r[1] for r in rows]),
+            reward=stk([r[2] for r in rows]),
+            next_obs=stk([r[3] for r in rows]),
+            done=stk([np.float32(r[4]) for r in rows]),
+            valid=np.asarray([r[5] for r in rows], bool)[None],
+            extras=extras)
+
+
+def serving_rollout(spec) -> ServingRollout:
+    """Build the serving backend for an `ExecSpec(backend="serving")`.
+
+    Fresh state per call: each Simulator / StreamRunner / trainer gets its
+    own pool, which then persists across that consumer's windows and rounds.
+    Pool size is deferred to the first call's `ecfg.num_servers` (the spec
+    does not know the workload) and fixed thereafter.
+    """
+    return _from_spec(spec)
+
+
+def _from_spec(spec) -> "ServingRollout":
+    class _Lazy:
+        """Defers pool construction to the first call (the spec does not
+        know num_servers; the workload's ecfg does)."""
+        backend = "serving"
+
+        def __init__(self):
+            self.inner: Optional[ServingRollout] = None
+
+        def _ensure(self, num_servers: int) -> ServingRollout:
+            if self.inner is None:
+                self.inner = ServingRollout(
+                    num_servers, archs=spec.serving_archs,
+                    reduced=spec.serving_reduced,
+                    wall_clock=spec.serving_wall_clock,
+                    execute=spec.serving_execute,
+                    prompt_len=spec.serving_prompt_len,
+                    max_new_tokens=spec.serving_max_new_tokens,
+                    seed=spec.serving_seed)
+            return self.inner
+
+        def __call__(self, ecfg, traces, policy, params, keys, **kw):
+            return self._ensure(ecfg.num_servers)(
+                ecfg, traces, policy, params, keys, **kw)
+
+        def reset(self):
+            if self.inner is not None:
+                self.inner.reset()
+
+        def serving_stats(self):
+            return self.inner.serving_stats() if self.inner else {}
+
+    return _Lazy()

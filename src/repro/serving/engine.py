@@ -1,38 +1,44 @@
 """In-process edge-serving engine: the paper's Fig.-1 system, executable.
 
 Components (mirroring the paper's implementation, §VI.A.1, minus Docker/NCCL):
-  * ``ServerPool`` — N logical edge servers; each holds at most one loaded
-    model (params on device). Loading/unloading is real work (param init /
-    drop); reuse skips it, exactly the cold-start economics the paper
-    schedules around.
+  * ``ServerPool`` (`serving.pool`) — N logical edge servers; each holds at
+    most one loaded model (params on device). Loading/unloading is real work
+    (param init / drop); reuse skips it, exactly the cold-start economics
+    the paper schedules around.
+  * ``ModelExecutor`` (`serving.executor`) — cached zoo models + jitted
+    prefill/decode; real patch-parallel batched prefill.
   * ``Request`` — an AIGC task: (service/arch id, prompt tokens, patches c_k,
     arrival time). "Inference steps" map to decode steps for LM services.
-  * ``ServingEngine`` — the host loop: maintains the waiting queue, builds
-    the Eq.-6 state from *real* pool state, asks a policy (EAT or baseline)
-    for (execute?, task, steps), gang-allocates c_k servers, runs real
-    prefill+decode on the selected model, and records wall-clock metrics.
+  * ``ServingEngine`` — the legacy host loop: maintains the waiting queue,
+    builds the Eq.-6 state from *real* pool state through the shared
+    `core.obs` normalisation path, asks a policy for (execute?, task,
+    steps), gang-allocates c_k servers, runs real prefill+decode on the
+    selected model, and reports QoS through the shared `StreamAggregator`
+    schema (`qos_summary`).
 
-Patch parallelism: a c_k-patch task splits its prompt into c_k chunks that
-are prefilled as a batch dimension (the TPU mapping: each chunk lives on one
-mesh slice; on this CPU container they execute as one batched call and we
-account the parallel speedup with the Table-VI model). Decode then proceeds
-from the merged KV cache.
+This host loop predates the unified stack; the stream-native door is the
+serving execution backend (`serving.backend` / ``ExecSpec(backend=
+"serving")``), which drives the same pool + executor from the shared env
+decision step under `Simulator` / `StreamRunner` / `train_stream_sac`.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+import warnings
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.config import ArchConfig, get_config
 from repro.core import env as EV
+from repro.core import obs as OBS
 from repro.core import timemodel as TM
 from repro.core.quality import quality_of
-from repro.models.zoo import Model, build_model
+from repro.serving.executor import ModelExecutor
+from repro.serving.pool import LogicalServer, ServerPool  # noqa: F401 (re-export)
+from repro.traffic import metrics as MX
 
 
 @dataclass
@@ -52,55 +58,6 @@ class Request:
     quality: float = 0.0
 
 
-@dataclass
-class LogicalServer:
-    sid: int
-    model_name: Optional[str] = None
-    params: Optional[object] = None
-    gang: int = -1                # request id of last gang
-    gang_size: int = 0
-    busy_until: float = 0.0
-
-
-class ServerPool:
-    def __init__(self, num_servers: int):
-        self.servers = [LogicalServer(i) for i in range(num_servers)]
-        self.load_count = 0
-        self.reuse_count = 0
-
-    def idle(self, now: float) -> List[LogicalServer]:
-        return [s for s in self.servers if s.busy_until <= now]
-
-    def find_reusable_gang(self, arch: str, c: int, now: float):
-        """A complete idle gang with matching model and size (paper Eq. 1)."""
-        groups: Dict[int, List[LogicalServer]] = {}
-        for s in self.idle(now):
-            if s.model_name == arch and s.gang_size == c and s.gang >= 0:
-                groups.setdefault(s.gang, []).append(s)
-        for gid, members in sorted(groups.items()):
-            if len(members) == c:
-                return members
-        return None
-
-    def pick_fresh(self, c: int, now: float) -> Optional[List[LogicalServer]]:
-        """Fragmentation-aware greedy (§V.B.4): prefer breaking already-broken
-        gangs; among intact gangs break the smallest."""
-        idle = self.idle(now)
-        if len(idle) < c:
-            return None
-        idle_ids = {s.sid for s in idle}
-
-        def intact(s: LogicalServer) -> bool:
-            if s.gang < 0:
-                return False
-            members = [t for t in self.servers
-                       if t.gang == s.gang and t.gang_size == s.gang_size]
-            return all(t.sid in idle_ids for t in members)
-
-        idle.sort(key=lambda s: (intact(s) * (100 + 10 * s.gang_size), s.sid))
-        return idle[:c]
-
-
 class ServingEngine:
     """policy(obs, key) -> action vector in [0,1]^(2+l)."""
 
@@ -115,10 +72,10 @@ class ServingEngine:
         self.l = queue_window
         self.s_min, self.s_max = s_min, s_max
         self.reduced = reduced
-        self._models: Dict[str, Model] = {}
-        self._step_fns: Dict[str, Callable] = {}
+        self.executor = ModelExecutor(reduced=reduced)
         self.key = jax.random.PRNGKey(seed)
         self.clock = 0.0
+        self.n_submitted = 0
         # >0: simulated seconds per Table-VI unit (deterministic virtual time);
         # 0: wall clock.
         self.time_dilation = time_dilation
@@ -135,69 +92,74 @@ class ServingEngine:
             self.clock += dt
 
     # -- model management -------------------------------------------------
-    def _model(self, arch: str) -> Model:
-        if arch not in self._models:
-            cfg = get_config(arch)
-            self._models[arch] = build_model(cfg.reduced() if self.reduced else cfg)
-        return self._models[arch]
-
     def _load(self, server: LogicalServer, arch: str):
-        model = self._model(arch)
         self.key, k = jax.random.split(self.key)
-        server.params = model.init(k)           # real weight materialisation
+        server.params = self.executor.init_params(arch, k)
         server.model_name = arch
         self.pool.load_count += 1
 
     # -- queue ------------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
+        self.n_submitted += 1
 
-    def observe(self) -> np.ndarray:
-        """Eq.-6 matrix from real pool state."""
+    def _mirror(self):
+        """Pool/queue state as an (EnvConfig, trace, EnvState) triple — the
+        exact inputs of the simulator's Eq.-6 path. Queue slots hold the
+        visible requests sorted by arrival (the simulated visible-queue
+        order); empty task slots get arr_time=+inf so they are never queued."""
         now = self.now()
         E = len(self.pool.servers)
-        obs = np.zeros((3, E + self.l), np.float32)
-        for i, s in enumerate(self.pool.servers):
-            obs[0, i] = 1.0 if s.busy_until <= now else 0.0
-            obs[1, i] = max(0.0, s.busy_until - now) / 60.0
-            obs[2, i] = ((self.archs.index(s.model_name) + 1) / len(self.archs)
-                         if s.model_name in self.archs else 0.0)
-        for j, r in enumerate(sorted(self.queue, key=lambda r: r.arrive_t)[: self.l]):
-            obs[0, E + j] = (now - r.arrive_t) / 60.0
-            obs[1, E + j] = r.patches / 8.0
-            obs[2, E + j] = (self.archs.index(r.arch) + 1) / len(self.archs)
-        return obs
+        reqs = sorted(self.queue, key=lambda r: r.arrive_t)
+        K = max(len(reqs), self.l, 1)
+        arr = np.full(K, np.inf, np.float32)
+        c = np.ones(K, np.int32)
+        model = np.zeros(K, np.int32)
+        for j, r in enumerate(reqs):
+            arr[j] = r.arrive_t
+            c[j] = r.patches
+            model[j] = self.archs.index(r.arch) if r.arch in self.archs else 0
+        cfg = EV.EnvConfig(num_servers=E, queue_window=self.l, max_tasks=K,
+                           num_models=len(self.archs))
+        trace = {"arr_time": jnp.asarray(arr), "c": jnp.asarray(c),
+                 "model": jnp.asarray(model),
+                 "noise": jnp.zeros((K,), jnp.float32)}
+        midx = np.asarray([self.archs.index(s.model_name)
+                           if s.model_name in self.archs else -1
+                           for s in self.pool.servers], np.int32)
+        state = EV.EnvState(
+            time=jnp.float32(now),
+            server_free_at=jnp.asarray(
+                [s.busy_until for s in self.pool.servers], jnp.float32),
+            server_model=jnp.asarray(midx),
+            server_gang=jnp.asarray(
+                [s.gang for s in self.pool.servers], jnp.int32),
+            server_gang_size=jnp.asarray(
+                [s.gang_size for s in self.pool.servers], jnp.int32),
+            task_status=jnp.zeros((K,), jnp.int32),
+            task_start=jnp.zeros((K,), jnp.float32),
+            task_finish=jnp.zeros((K,), jnp.float32),
+            task_steps=jnp.zeros((K,), jnp.int32),
+            task_quality=jnp.zeros((K,), jnp.float32),
+            task_reload=jnp.zeros((K,), jnp.int32),
+            steps_taken=jnp.zeros((), jnp.int32),
+        )
+        return cfg, trace, state
+
+    def observe(self) -> np.ndarray:
+        """Eq.-6 matrix from real pool state, through the one shared
+        normalisation path (`core.obs.observe_from`) — pool-derived and
+        simulated observations are the same array on matched state."""
+        cfg, trace, state = self._mirror()
+        q = OBS.visible_queue(cfg, trace, state)
+        return np.asarray(OBS.observe_from(cfg, trace, state, q))
 
     # -- execution ---------------------------------------------------------
     def _generate(self, req: Request, steps: int, servers: List[LogicalServer]):
         """Real patch-parallel prefill + decode on the gang leader's params."""
-        model = self._model(req.arch)
-        cfg = model.cfg
-        params = servers[0].params
-        c = len(servers)
-        prompt = np.asarray(req.prompt, np.int32)
-        # patch-parallel prefill: split the prompt into c chunks -> batch dim
-        # (each chunk is one server's patch; merged back into a single cache)
-        pad = (-len(prompt)) % c
-        chunks = np.pad(prompt, (0, pad)).reshape(c, -1)
-        cache = model.make_cache(1, len(prompt) + pad + req.max_new_tokens,
-                                 dtype=jnp.float32)
-        batch = {"tokens": jnp.asarray(prompt[None])}
-        if cfg.frontend == "vision":
-            batch["image_embeds"] = jnp.zeros((1, cfg.frontend_tokens,
-                                               cfg.frontend_dim))
-        if cfg.family == "audio":
-            batch["frames"] = jnp.zeros((1, cfg.frontend_tokens, cfg.d_model))
-        logits, cache = model.prefill(params, batch, cache,
-                                      compute_dtype=jnp.float32)
-        out = []
-        tok = jnp.argmax(logits[:, -1:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
-        for _ in range(steps):
-            out.append(int(tok[0, 0]))
-            logits, cache = model.decode(params, cache, tok,
-                                         compute_dtype=jnp.float32)
-            tok = jnp.argmax(logits[:, -1:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
-        req.tokens = np.asarray(out, np.int32)
+        req.tokens = self.executor.generate(
+            req.arch, servers[0].params, req.prompt, len(servers), steps,
+            req.max_new_tokens)
 
     def try_schedule(self, action: np.ndarray) -> Optional[Request]:
         """One scheduler decision (Algorithm 1 lines 4-31)."""
@@ -246,7 +208,51 @@ class ServingEngine:
         return req
 
     # -- metrics ------------------------------------------------------------
+    def qos_summary(self, resp_sla: float = 120.0,
+                    q_min: float = 0.23) -> Dict[str, float]:
+        """Run-level QoS in the shared `StreamAggregator` schema — the same
+        keys (latency_p50/p95/p99, violation, goodput, cold_start,
+        utilization, ...) the simulated streaming backends report, so real
+        and simulated runs drop into one comparison table."""
+        agg = MX.StreamAggregator(len(self.pool.servers), q_min, resp_sla)
+        now = self.now()
+        resp = np.asarray([r.finish_t - r.arrive_t for r in self.done],
+                          np.float64)
+        quality = np.asarray([r.quality for r in self.done], np.float64)
+        counts = np.zeros(len(MX.DEFAULT_EDGES) + 1, np.int64)
+        np.add.at(counts, np.searchsorted(MX.DEFAULT_EDGES, resp), 1)
+        viol_q = quality < q_min
+        viol_t = resp > resp_sla
+        agg.update({
+            "n_injected": self.n_submitted,
+            "n_sched": len(self.done),
+            "n_done": int(sum(r.finish_t <= now for r in self.done)),
+            "n_dropped": 0,
+            "n_reload": int(sum(not r.reused for r in self.done)),
+            "n_viol": int(np.sum(viol_q | viol_t)),
+            "n_viol_q": int(np.sum(viol_q)),
+            "n_viol_t": int(np.sum(viol_t)),
+            "sum_resp": float(resp.sum()),
+            "sum_quality": float(quality.sum()),
+            "sum_steps": float(sum(r.steps for r in self.done)),
+            "busy_time": float(sum(r.patches * (r.finish_t - r.start_t)
+                                   for r in self.done)),
+            "elapsed": now,
+            "hist": counts,
+            "max_resp": float(resp.max()) if len(resp) else 0.0,
+        })
+        out = agg.summary()
+        out.update(self.pool.counters())
+        out["wall_clock"] = not bool(self.time_dilation)
+        return out
+
     def metrics(self) -> Dict[str, float]:
+        """Deprecated ad-hoc metrics dict; use `qos_summary()` (the shared
+        StreamAggregator schema) instead."""
+        warnings.warn(
+            "ServingEngine.metrics is deprecated; use "
+            "ServingEngine.qos_summary (the shared StreamAggregator "
+            "QoS schema)", DeprecationWarning, stacklevel=2)
         if not self.done:
             return {"completed": 0}
         resp = [r.finish_t - r.arrive_t for r in self.done]

@@ -1,0 +1,160 @@
+"""Real prefill/decode execution for the serving layer.
+
+`ModelExecutor` owns the model zoo instances (reduced or full configs), the
+per-arch jitted prefill/decode programs, and the generation loop the engine
+and the serving backend both call. Two correctness properties live here:
+
+KV-cache sizing. The scheduler picks the inference-step count (up to
+``s_max``) independently of the request's ``max_new_tokens``; the decode
+loop runs ``steps`` iterations, so the cache is sized by
+``max(steps, max_new_tokens)`` — the legacy engine sized it by
+``max_new_tokens`` alone and silently overflowed the cache once the policy
+chose more steps (decode writes past capacity clamp at the boundary).
+
+Patch-parallel prefill. A c_k-patch task splits its prompt into c_k chunks
+prefilled as a batch dimension — the DistriFusion patch mapping: each chunk
+is one gang member's patch, computed in parallel with no cross-patch
+attention (chunk-local RoPE positions come for free from the per-row
+``arange(s)`` in `blocks.attn_prefill`). The per-chunk KV caches then merge
+back into one sequence-ordered cache (a pure reshape) that decode attends
+over. For ``c == 1`` the chunked path is bitwise-identical to the unchunked
+one (same positions, same flash-attention block shapes, same cache content)
+— tests pin this. Architectures whose caches are not pure attention KV
+(SSM/hybrid recurrent state, sliding-window rings, audio/vision frontends)
+fall back to the unchunked prefill; the Table-VI latency model still
+accounts the parallel speedup either way.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import get_config
+from repro.models.lm import period_spec
+from repro.models.zoo import Model, build_model
+
+# decode-capacity rounding: buckets cache shapes so jit re-traces per
+# capacity bucket, not per (steps, max_new_tokens) pair. Value-safe: decode
+# attention masks entries at or beyond `pos` (`attention.decode_attention`).
+_CAP_ROUND = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def chunkable(cfg) -> bool:
+    """True when the patch-parallel (batched-chunk) prefill applies: every
+    mixer is plain full attention (KV merge is a reshape) and no frontend
+    tokens are prepended per batch row."""
+    if cfg.family == "audio" or cfg.frontend != "none":
+        return False
+    if cfg.sliding_window:
+        return False
+    return all(mixer == "attn" for mixer, _f in period_spec(cfg))
+
+
+def _merge_chunk_cache(model: Model, ccache: Dict, S_pad: int,
+                       capacity: int) -> Dict:
+    """(c, chunk)-batched prefill caches -> one (1, capacity) decode cache.
+
+    Chunks are consecutive prompt slices, so concatenating their KV along
+    the sequence axis — a reshape of (periods, c, chunk, kv, hd) — restores
+    prompt order exactly; `pos = S_pad` points decode past the merged KV."""
+    big = model.make_cache(1, capacity, dtype=jnp.float32)
+
+    def merge(dst, src):
+        npd, c, chunk, nk, hd = src.shape
+        flat = src.reshape(npd, 1, c * chunk, nk, hd)
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, flat.astype(dst.dtype), 0, axis=2)
+
+    periods = jax.tree_util.tree_map(merge, big["periods"],
+                                     ccache["periods"])
+    return {"periods": periods, "pos": jnp.asarray(S_pad, jnp.int32)}
+
+
+class ModelExecutor:
+    """Cached models + jitted inference programs, shared by every server.
+
+    One executor per engine/backend: all gang leaders of the same arch run
+    through the same compiled prefill/decode programs (shapes permitting),
+    so a stream pays tracing once per (arch, shape bucket)."""
+
+    def __init__(self, reduced: bool = True):
+        self.reduced = reduced
+        self._models: Dict[str, Model] = {}
+        self._prefill: Dict[str, Callable] = {}
+        self._decode: Dict[str, Callable] = {}
+
+    def model(self, arch: str) -> Model:
+        if arch not in self._models:
+            cfg = get_config(arch)
+            model = build_model(cfg.reduced() if self.reduced else cfg)
+            self._models[arch] = model
+            self._prefill[arch] = jax.jit(
+                lambda p, b, c, m=model: m.prefill(
+                    p, b, c, compute_dtype=jnp.float32))
+            self._decode[arch] = jax.jit(
+                lambda p, c, t, m=model: m.decode(
+                    p, c, t, compute_dtype=jnp.float32))
+        return self._models[arch]
+
+    def init_params(self, arch: str, key):
+        """Real weight materialisation — the cold-start cost being scheduled
+        around (the Table-VI init_time stands in for its wall-clock)."""
+        return self.model(arch).init(key)
+
+    # ------------------------------------------------------------------
+    def _full_batch(self, cfg, prompt: np.ndarray) -> Dict:
+        batch = {"tokens": jnp.asarray(prompt[None])}
+        if cfg.frontend == "vision":
+            batch["image_embeds"] = jnp.zeros((1, cfg.frontend_tokens,
+                                               cfg.frontend_dim))
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros((1, cfg.frontend_tokens, cfg.d_model))
+        return batch
+
+    def generate(self, arch: str, params, prompt, c: int, steps: int,
+                 max_new_tokens: int = 16, *,
+                 force_chunked: Optional[bool] = None) -> np.ndarray:
+        """Greedy generation of `steps` tokens on a c-patch gang's params.
+
+        `force_chunked` overrides the c>1 chunking heuristic (tests assert
+        the c=1 chunked path is bitwise-identical to the unchunked one)."""
+        model = self.model(arch)
+        cfg = model.cfg
+        prompt = np.asarray(prompt, np.int32)
+        c = max(int(c), 1)
+        steps = int(steps)
+        pad = (-len(prompt)) % c
+        S_pad = len(prompt) + pad
+        capacity = S_pad + _round_up(max(steps, int(max_new_tokens)),
+                                     _CAP_ROUND)
+        use_chunked = (chunkable(cfg) if force_chunked is None
+                       else force_chunked)
+        if use_chunked:
+            # left-pad so the prompt's true final token ends the last chunk —
+            # its last-position logits are the next-token distribution
+            chunks = jnp.asarray(np.pad(prompt, (pad, 0)).reshape(c, -1))
+            ccache = model.make_cache(c, chunks.shape[1], dtype=jnp.float32)
+            logits, ccache = self._prefill[arch](
+                params, {"tokens": chunks}, ccache)
+            cache = _merge_chunk_cache(model, ccache, S_pad, capacity)
+            logits = logits[-1:]     # the prompt's last token ends chunk c-1
+        else:
+            cache = model.make_cache(1, capacity, dtype=jnp.float32)
+            logits, cache = self._prefill[arch](
+                params, self._full_batch(cfg, prompt), cache)
+        out = []
+        tok = jnp.argmax(logits[:, -1:, : cfg.vocab_size],
+                         axis=-1).astype(jnp.int32)
+        for _ in range(steps):
+            out.append(int(tok[0, 0]))
+            logits, cache = self._decode[arch](params, cache, tok)
+            tok = jnp.argmax(logits[:, -1:, : cfg.vocab_size],
+                             axis=-1).astype(jnp.int32)
+        return np.asarray(out, np.int32)

@@ -127,8 +127,10 @@ def test_resolve_shards_gcd_degrade():
                                   "genetic", "harmony"])
 def test_registry_backend_grid(name):
     """Every registered policy runs through episodic AND streaming
-    simulation on all three backends with identical summary metrics
-    (sharded parity bitwise vs fused)."""
+    simulation on all batch-parallel simulated backends with identical
+    summary metrics (sharded parity bitwise vs fused). The serving
+    backend is one physical cluster (B=1) and has its own parity suite
+    in tests/test_serving_backend.py."""
     key = jax.random.PRNGKey(7)
     workloads = {
         "episodic": api.WorkloadSpec.episodic(CELL, batch=8, num_steps=16),
@@ -137,7 +139,7 @@ def test_registry_backend_grid(name):
     }
     for mode, wl in workloads.items():
         results = {}
-        for backend in api.BACKENDS:
+        for backend in api.SIM_BACKENDS:
             sim = api.Simulator(wl, api.ExecSpec(backend=backend))
             if name in ("eat", "ppo"):      # fresh weights -> flagged
                 with pytest.warns(api.UntrainedPolicyWarning):

@@ -1,14 +1,22 @@
-"""End-to-end serving engine: real model execution, gang allocation, reuse."""
+"""Serving layer: pool gang semantics, real execution (KV sizing,
+patch-parallel prefill), engine QoS schema, Eq.-6 observation parity."""
+import dataclasses
+
+import jax
 import numpy as np
 import pytest
 
+from repro.core import env as EV
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.executor import ModelExecutor, chunkable
+from repro.serving.pool import LogicalServer, ServerPool
 
 
-def _req(rid, arch="tinyllama-1.1b", c=2, t=0.0, prompt_len=8):
+def _req(rid, arch="tinyllama-1.1b", c=2, t=0.0, prompt_len=8,
+         max_new_tokens=4):
     rng = np.random.default_rng(rid)
     return Request(rid=rid, arch=arch, prompt=rng.integers(0, 1000, prompt_len),
-                   patches=c, arrive_t=t, max_new_tokens=4)
+                   patches=c, arrive_t=t, max_new_tokens=max_new_tokens)
 
 
 def _random_policy(engine, rng):
@@ -17,6 +25,7 @@ def _random_policy(engine, rng):
     return a
 
 
+# ---------------------------------------------------------------- engine
 def test_engine_serves_requests():
     eng = ServingEngine(num_servers=2, archs=["tinyllama-1.1b"], queue_window=4,
                         reduced=True, time_dilation=1.0, s_min=2, s_max=4)
@@ -27,11 +36,12 @@ def test_engine_serves_requests():
         if not eng.queue:
             break
         eng.try_schedule(_random_policy(eng, rng))
-    m = eng.metrics()
-    assert m["completed"] == 3
+    m = eng.qos_summary()
+    assert m["tasks_scheduled"] == 3
     assert all(r.tokens is not None and len(r.tokens) == r.steps
                for r in eng.done)
     assert m["avg_quality"] > 0
+    assert m["wall_clock"] is False       # virtual (Table-VI) time mode
 
 
 def test_engine_model_reuse():
@@ -48,7 +58,9 @@ def test_engine_model_reuse():
     r1 = eng.try_schedule(_random_policy(eng, rng))
     assert r1 is not None and r1.reused
     assert eng.pool.load_count == 2      # only the first gang loaded
-    assert eng.metrics()["reload_rate"] == 0.5
+    m = eng.qos_summary()
+    assert m["model_loads"] == 2 and m["model_reuses"] == 1
+    assert m["cold_start_rate"] == pytest.approx(0.5)
 
 
 def test_engine_gang_infeasible():
@@ -62,6 +74,39 @@ def test_engine_gang_infeasible():
     assert len(eng.queue) == 1
 
 
+def test_engine_qos_summary_stream_schema():
+    """Engine QoS rows use the shared StreamAggregator schema, so real and
+    simulated runs drop into one comparison table."""
+    eng = ServingEngine(num_servers=2, archs=["tinyllama-1.1b"], queue_window=4,
+                        reduced=True, time_dilation=1.0, s_min=2, s_max=4)
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        eng.submit(_req(i, c=1))
+    for _ in range(8):
+        if not eng.queue:
+            break
+        eng.try_schedule(_random_policy(eng, rng))
+    m = eng.qos_summary(resp_sla=1e6)
+    for key in ("latency_p50", "latency_p95", "latency_p99", "latency_mean",
+                "qos_violation_rate", "drop_rate", "cold_start_rate",
+                "reuse_rate", "utilization", "goodput_per_s", "avg_quality"):
+        assert key in m, key
+    assert m["tasks_injected"] == 2 and m["tasks_scheduled"] == 2
+    assert m["qos_violation_rate_latency"] == 0.0
+    assert np.isfinite(m["latency_p50"]) and m["latency_p50"] > 0
+
+
+def test_engine_metrics_deprecated_but_working():
+    eng = ServingEngine(num_servers=2, archs=["tinyllama-1.1b"], queue_window=4,
+                        reduced=True, time_dilation=1.0, s_min=2, s_max=2)
+    rng = np.random.default_rng(0)
+    eng.submit(_req(0, c=2))
+    eng.try_schedule(_random_policy(eng, rng))
+    with pytest.deprecated_call():
+        m = eng.metrics()
+    assert m["completed"] == 1 and m["loads"] == 2
+
+
 def test_engine_observation_matches_eq6():
     eng = ServingEngine(num_servers=3, archs=["tinyllama-1.1b", "qwen2-1.5b"],
                         queue_window=2, reduced=True, time_dilation=1.0)
@@ -70,6 +115,154 @@ def test_engine_observation_matches_eq6():
     assert obs.shape == (3, 3 + 2)
     assert np.all(obs[0, :3] == 1.0)      # all idle
     assert obs[1, 3] == pytest.approx(1 / 8)   # c_k row
+
+
+def test_engine_observation_parity_with_simulated_env():
+    """Pool-derived and simulated Eq.-6 observations are the same array on
+    matched state: build the simulated EnvState the engine's pool/queue
+    describe by hand and compare against `engine.observe()`."""
+    archs = ["tinyllama-1.1b", "qwen2-1.5b"]
+    eng = ServingEngine(num_servers=3, archs=archs, queue_window=2,
+                        reduced=True, time_dilation=1.0)
+    # server 0 busy until t=30 with arch 1, servers 1-2 idle with arch 0
+    eng.clock = 12.0
+    s0, s1, s2 = eng.pool.servers
+    s0.model_name, s0.busy_until, s0.gang, s0.gang_size = archs[1], 30.0, 7, 1
+    s1.model_name, s1.gang, s1.gang_size = archs[0], 3, 2
+    s2.model_name, s2.gang, s2.gang_size = archs[0], 3, 2
+    eng.submit(_req(0, arch=archs[0], c=2, t=2.0))
+    eng.submit(_req(1, arch=archs[1], c=1, t=9.0))
+
+    cfg = EV.EnvConfig(num_servers=3, queue_window=2, max_tasks=2,
+                       num_models=2)
+    trace = {"arr_time": np.asarray([2.0, 9.0], np.float32),
+             "c": np.asarray([2, 1], np.int32),
+             "model": np.asarray([0, 1], np.int32),
+             "noise": np.zeros(2, np.float32)}
+    state = EV.reset(cfg)._replace(
+        time=np.float32(12.0),
+        server_free_at=np.asarray([30.0, 0.0, 0.0], np.float32),
+        server_model=np.asarray([1, 0, 0], np.int32),
+        server_gang=np.asarray([7, 3, 3], np.int32),
+        server_gang_size=np.asarray([1, 2, 2], np.int32))
+    sim_obs = np.asarray(EV.observe(cfg, {k: np.asarray(v) for k, v
+                                          in trace.items()}, state))
+    np.testing.assert_array_equal(eng.observe(), sim_obs)
+
+
+# ---------------------------------------------------------------- pool
+def _pool(n):
+    return ServerPool(n)
+
+
+def _assign(pool, sids, arch, gang, size, busy=0.0):
+    for sid in sids:
+        s = pool.servers[sid]
+        s.model_name, s.gang, s.gang_size, s.busy_until = arch, gang, size, busy
+        s.params = object()
+
+
+def test_pool_find_reusable_gang_exact_match():
+    pool = _pool(4)
+    _assign(pool, [0, 1], "a", gang=5, size=2)
+    _assign(pool, [2, 3], "a", gang=7, size=2)
+    pool.servers[3].busy_until = 10.0          # gang 7 broken: member busy
+    got = pool.find_reusable_gang("a", 2, now=0.0)
+    assert got is not None and {s.sid for s in got} == {0, 1}
+    # size must match exactly — a 2-gang never serves a 1-patch task
+    assert pool.find_reusable_gang("a", 1, now=0.0) is None
+    # arch must match
+    assert pool.find_reusable_gang("b", 2, now=0.0) is None
+    # re-assigning one member breaks the gang for good
+    pool.servers[1].gang = 9
+    assert pool.find_reusable_gang("a", 2, now=0.0) is None
+    # ...but once both of gang 7's members are idle it matches again
+    pool.servers[3].busy_until = 0.0
+    got = pool.find_reusable_gang("a", 2, now=0.0)
+    assert got is not None and {s.sid for s in got} == {2, 3}
+
+
+def test_pool_pick_fresh_fragmentation_ordering():
+    pool = _pool(6)
+    _assign(pool, [0, 1], "a", gang=1, size=2)      # intact, small
+    _assign(pool, [2, 3, 4], "a", gang=2, size=3)   # intact, big
+    # server 5 never gang-assigned: free real estate, consumed first
+    got = pool.pick_fresh(2, now=0.0)
+    assert [s.sid for s in got] == [5, 0]   # free first, then smallest intact
+    # a busy member breaks gang 2: its idle remnants sort before intact gangs
+    pool.servers[2].busy_until = 10.0
+    got = pool.pick_fresh(3, now=0.0)
+    assert [s.sid for s in got] == [3, 4, 5]
+    # not enough idle servers -> None
+    assert pool.pick_fresh(6, now=0.0) is None
+
+
+def test_pool_counter_economics_interleaved_gangs():
+    """Load/reuse ledger under interleaved gangs via the engine: loads count
+    per *server* (a c=2 cold gang costs 2), reuses per *task*."""
+    eng = ServingEngine(num_servers=4, archs=["tinyllama-1.1b"],
+                        queue_window=4, reduced=True, time_dilation=1.0,
+                        s_min=2, s_max=2)
+    rng = np.random.default_rng(0)
+    eng.submit(_req(0, c=2))
+    eng.try_schedule(_random_policy(eng, rng))      # cold: +2 loads
+    eng.submit(_req(1, c=1, t=eng.clock))
+    eng.try_schedule(_random_policy(eng, rng))      # cold c=1 on s2/s3: +1
+    assert (eng.pool.load_count, eng.pool.reuse_count) == (3, 0)
+    eng.clock = max(s.busy_until for s in eng.pool.servers) + 1
+    eng.submit(_req(2, c=2, t=eng.clock))
+    eng.try_schedule(_random_policy(eng, rng))      # reuse the c=2 gang
+    assert (eng.pool.load_count, eng.pool.reuse_count) == (3, 1)
+    assert eng.pool.counters() == {"model_loads": 3, "model_reuses": 1}
+    eng.pool.reset()
+    assert eng.pool.counters() == {"model_loads": 0, "model_reuses": 0}
+    assert all(s.params is None and s.gang == -1 for s in eng.pool.servers)
+
+
+# ---------------------------------------------------------------- executor
+def test_executor_kv_capacity_steps_beyond_max_new_tokens():
+    """Regression: the scheduler may pick more inference steps than the
+    request's max_new_tokens; the KV cache must be sized by the max of the
+    two (the legacy engine sized by max_new_tokens alone and overflowed)."""
+    ex = ModelExecutor(reduced=True)
+    params = ex.init_params("tinyllama-1.1b", jax.random.PRNGKey(0))
+    prompt = np.arange(1, 9, dtype=np.int32)
+    steps = 12
+    toks_small = ex.generate("tinyllama-1.1b", params, prompt, 1, steps,
+                             max_new_tokens=4)       # steps > max_new_tokens
+    toks_big = ex.generate("tinyllama-1.1b", params, prompt, 1, steps,
+                           max_new_tokens=64)        # oversized cache
+    assert len(toks_small) == steps
+    # a silently clamped/overflowing cache would corrupt late-step attention:
+    # capacity must not change the generation
+    np.testing.assert_array_equal(toks_small, toks_big)
+
+
+def test_executor_chunked_c1_parity():
+    """The patch-parallel (chunk-batched) prefill with c=1 is bitwise-
+    identical to the unchunked path."""
+    ex = ModelExecutor(reduced=True)
+    params = ex.init_params("tinyllama-1.1b", jax.random.PRNGKey(1))
+    prompt = np.arange(1, 13, dtype=np.int32)
+    a = ex.generate("tinyllama-1.1b", params, prompt, 1, 6,
+                    force_chunked=True)
+    b = ex.generate("tinyllama-1.1b", params, prompt, 1, 6,
+                    force_chunked=False)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_executor_patch_parallel_prefill_executes():
+    """c>1 actually batches the prompt chunks (the legacy path computed the
+    chunks and threw them away): uneven prompts left-pad, decode proceeds
+    from the merged cache."""
+    ex = ModelExecutor(reduced=True)
+    assert chunkable(ex.model("tinyllama-1.1b").cfg)
+    params = ex.init_params("tinyllama-1.1b", jax.random.PRNGKey(2))
+    prompt = np.arange(1, 11, dtype=np.int32)        # len 10, c=4 -> pad 2
+    toks = ex.generate("tinyllama-1.1b", params, prompt, 4, 5)
+    assert len(toks) == 5
+    assert np.all(toks >= 0) and np.all(toks < ex.model(
+        "tinyllama-1.1b").cfg.vocab_size)
 
 
 def test_latency_table_scales():

@@ -1,0 +1,200 @@
+"""The serving execution backend: `ExecSpec(backend="serving")` drives the
+real cluster through the unified `repro.api` / `traffic.stream` /
+`training.stream_train` seams.
+
+Parity contract: in virtual time (`serving_wall_clock=False`) the serving
+backend's decision process — metrics, final carry, collected transitions —
+is bitwise-identical to the fused simulator on the same (workload, policy,
+key); real model execution rides along without perturbing the MDP. Wall-
+clock mode replaces the Table-VI latencies with measured seconds.
+"""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import agent as AG
+from repro.core import env as EV
+from repro.core import sac as SAC
+from repro.core.scenarios import Scenario
+from repro.core.workload import TraceConfig
+
+ECFG = EV.EnvConfig(num_servers=4, max_tasks=8)
+TCFG = TraceConfig(num_tasks=8, arrival_rate=2.0, max_servers=4)
+CELL = Scenario(name="serve-test-cell", ecfg=ECFG, tcfg=TCFG)
+ACFG = AG.AgentConfig(variant="eat-da", T=2)
+
+MIRROR = api.ExecSpec(backend="serving", serving_execute=False)
+REAL = api.ExecSpec(backend="serving", serving_archs=("tinyllama-1.1b",),
+                    serving_prompt_len=8, serving_max_new_tokens=8)
+
+
+def _wl(**kw):
+    kw.setdefault("streams", 1)
+    kw.setdefault("num_windows", 2)
+    kw.setdefault("window_tasks", 8)
+    kw.setdefault("max_steps_per_window", 16)
+    return api.WorkloadSpec.streaming(CELL, **kw)
+
+
+def _run(wl, spec, policy, key):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", api.UntrainedPolicyWarning)
+        return api.Simulator(wl, spec).run(policy, key)
+
+
+# ------------------------------------------------------------ validation
+def test_serving_backend_registered():
+    assert "serving" in api.BACKENDS
+    assert api.ExecSpec(backend="serving").backend == "serving"
+
+
+def test_serving_rejects_multi_stream_workloads():
+    with pytest.raises(ValueError, match="ONE physical cluster"):
+        api.Simulator(_wl(streams=2), MIRROR)
+    from repro.serving.runner import ServingStreamRunner
+    from repro.traffic.stream import StreamConfig
+    with pytest.raises(ValueError, match="num_streams=1"):
+        ServingStreamRunner(ECFG, None, {}, None, jax.random.PRNGKey(0),
+                            StreamConfig(num_streams=2))
+
+
+def test_serving_runner_requires_serving_rollout_fn():
+    from repro.api.backends import rollout_fn_for
+    from repro.serving.runner import ServingStreamRunner
+    from repro.traffic.stream import StreamConfig
+    with pytest.raises(ValueError, match="serving rollout fn"):
+        ServingStreamRunner(ECFG, None, {}, None, jax.random.PRNGKey(0),
+                            StreamConfig(num_streams=1),
+                            rollout_fn=rollout_fn_for(api.ExecSpec()))
+
+
+# ------------------------------------------------------------ parity
+@pytest.mark.parametrize("policy", ["greedy", "fifo", "random"])
+def test_virtual_time_parity_with_fused_backend(policy):
+    """Multi-window streaming summary + final carry, serving vs fused."""
+    key = jax.random.PRNGKey(0)
+    rf = _run(_wl(), api.ExecSpec(backend="fused"), policy, key)
+    rs = _run(_wl(), MIRROR, policy, key)
+    skip = {"model_loads", "model_reuses", "tasks_executed", "wall_clock"}
+    for k, a in rf.summary.items():
+        b = rs.summary[k]
+        if k in skip:
+            continue
+        if isinstance(a, float):
+            np.testing.assert_equal(b, a, err_msg=k)
+        else:
+            assert a == b, (k, a, b)
+    fc_f = jax.tree_util.tree_map(np.asarray, rf.raw.final_carry)
+    fc_s = jax.tree_util.tree_map(np.asarray, rs.raw.final_carry)
+    jax.tree_util.tree_map(np.testing.assert_array_equal, fc_f, fc_s)
+
+
+def test_collected_transitions_bitwise_match_fused():
+    """collect=True: serving-collected windows flatten to the exact replay
+    layout and bitwise-match the fused backend's collection."""
+    key = jax.random.PRNGKey(3)
+    wl = _wl(collect=True)
+    rf = _run(wl, api.ExecSpec(backend="fused"), "eat", key)
+    rs = _run(wl, MIRROR, "eat", key)
+    assert len(rf.raw.transitions) == len(rs.raw.transitions) == 2
+    for tf, ts in zip(rf.raw.transitions, rs.raw.transitions):
+        ff = SAC.flatten_valid_transitions(tf)
+        fs = SAC.flatten_valid_transitions(ts)
+        for name, a, b in zip(("obs", "action", "reward", "next_obs",
+                               "done"), ff, fs):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+
+
+def test_pool_economics_accrue_in_mirror_mode():
+    r = _run(_wl(num_windows=3), MIRROR, "greedy", jax.random.PRNGKey(0))
+    assert r.summary["tasks_executed"] == r.summary["tasks_scheduled"] > 0
+    assert r.summary["model_loads"] > 0
+    assert r.summary["wall_clock"] is False
+
+
+def test_simulator_resets_pool_between_runs():
+    sim = api.Simulator(_wl(), MIRROR)
+    r1 = _run(_wl(), MIRROR, "greedy", jax.random.PRNGKey(0))
+    ra = sim.run("greedy", jax.random.PRNGKey(0))
+    rb = sim.run("greedy", jax.random.PRNGKey(0))
+    assert ra.summary["model_loads"] == rb.summary["model_loads"] \
+        == r1.summary["model_loads"]
+
+
+# ------------------------------------------------------------ real execution
+def test_real_execution_stream():
+    """A multi-window Poisson stream on reduced real models end to end:
+    every scheduled task runs actual prefill+decode, QoS rows come back in
+    the shared StreamAggregator schema, checkpoint-restored policies work."""
+    r = _run(_wl(), REAL, "greedy", jax.random.PRNGKey(0))
+    assert r.summary["tasks_executed"] == r.summary["tasks_scheduled"] > 0
+    assert r.summary["model_loads"] > 0
+    for k in ("latency_p50", "latency_p95", "latency_p99",
+              "qos_violation_rate", "goodput_per_s", "cold_start_rate",
+              "utilization"):
+        assert k in r.summary, k
+    # virtual time: QoS numbers identical to the pure simulator's
+    rf = _run(_wl(), api.ExecSpec(backend="fused"), "greedy",
+              jax.random.PRNGKey(0))
+    assert r.summary["latency_p50"] == rf.summary["latency_p50"]
+
+
+def test_real_execution_with_checkpoint_restored_policy(tmp_path):
+    from repro.common.checkpoint import save_checkpoint
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", api.UntrainedPolicyWarning)
+        fresh = api.resolve(
+            api.PolicySpec("eat", options={"acfg": ACFG}), ECFG)
+    save_checkpoint(str(tmp_path), 1, fresh.params)
+    spec = api.PolicySpec("eat", checkpoint=str(tmp_path),
+                          options={"acfg": ACFG})
+    r = _run(_wl(num_windows=1), REAL, spec, jax.random.PRNGKey(1))
+    assert r.trained is True
+    assert r.summary["tasks_executed"] >= 0   # stream completed
+
+
+def test_wall_clock_mode_measures_latency():
+    spec = dataclasses.replace(REAL, serving_wall_clock=True)
+    r = _run(_wl(num_windows=1), spec, "greedy", jax.random.PRNGKey(0))
+    assert r.summary["wall_clock"] is True
+    assert r.summary["tasks_executed"] > 0
+    assert r.summary["measured_busy_mean_s"] > 0
+    # measured CPU latencies are far from the Table-VI edge-GPU model
+    rv = _run(_wl(num_windows=1), REAL, "greedy", jax.random.PRNGKey(0))
+    assert r.summary["latency_mean"] != rv.summary["latency_mean"]
+
+
+# ------------------------------------------------------------ training
+def test_train_stream_sac_on_serving_backend():
+    """>=1 fine-tune round on serving-collected transitions, with the
+    collected batches bitwise-identical to the fused backend's."""
+    from repro.training import stream_train as ST
+    scfg = SAC.SACConfig(warmup_steps=4, batch_size=8)
+    stcfg = ST.StreamTrainConfig(rounds=2, streams=1,
+                                 max_steps_per_window=12,
+                                 max_updates_per_round=2)
+    flats = {}
+
+    def train(spec):
+        seen = []
+        res = ST.train_stream_sac(
+            ECFG, ACFG, scfg, stcfg, scenario=CELL, seed=0, exec_spec=spec,
+            transition_hook=lambda r, flat: seen.append(
+                [np.asarray(x) for x in flat]))
+        return res, seen
+
+    res_s, flats["serving"] = train(MIRROR)
+    res_f, flats["fused"] = train(api.ExecSpec(backend="fused"))
+    assert len(res_s.history) == 2
+    assert res_s.history[0]["warmup"] is True      # round 0 fills the buffer
+    assert res_s.history[1]["warmup"] is False     # round 1 fine-tunes actor
+    assert res_s.history[1]["updates"] > 0
+    for fs, ff in zip(flats["serving"], flats["fused"]):
+        for name, a, b in zip(("obs", "action", "reward", "next_obs",
+                               "done"), fs, ff):
+            np.testing.assert_array_equal(a, b, err_msg=name)
