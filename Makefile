@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-all test-sharded train-stream-smoke serve-smoke bench-rollout bench-traffic bench-env-step bench-sharded-rollout bench-stream-train bench-serving traffic-sweep
+.PHONY: test test-all test-sharded train-stream-smoke serve-smoke trace-smoke bench-rollout bench-traffic bench-env-step bench-sharded-rollout bench-stream-train bench-serving bench-decision-latency traffic-sweep
 
 test-sharded:    ## api backend + stream-training parity under 8 forced host devices
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 $(PY) -m pytest tests/test_api.py tests/test_stream_train.py -q
@@ -24,6 +24,12 @@ train-stream-smoke:  ## few-window streaming-training smoke (tiny nets), fused t
 serve-smoke:     ## short Poisson stream on the real serving backend (tiny reduced model, virtual time)
 	$(PY) examples/serve_stream.py --policy greedy --windows 2 \
 	  --window-tasks 8 --servers 4 --archs tinyllama-1.1b
+
+trace-smoke:     ## traced stream on fused + serving: schema-valid, bitwise-identical on vs off
+	$(PY) scripts/trace_smoke.py
+
+bench-decision-latency:  ## per-decision inference latency of every registry policy -> BENCH_decision_latency.json
+	$(PY) benchmarks/bench_decision_latency.py
 
 bench-stream-train:  ## stream-training throughput fused vs sharded -> BENCH_stream_train.json
 	$(PY) benchmarks/bench_stream_train.py

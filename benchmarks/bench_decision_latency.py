@@ -1,69 +1,92 @@
 """Table XII — per-decision inference latency of each scheduler.
 
-Wall-clocks one scheduling decision (state -> action) per algorithm on this
-host. The paper's ordering (Greedy > EAT > EAT-A > EAT-DA ~ PPO > Random ~
-meta-heuristics ~ 0) comes from: Greedy enumerates candidate futures, the
+Wall-clocks one scheduling decision (state -> action) per registered policy
+on this host via the unified probe (`telemetry.profile.profile_policy`):
+every policy resolves through `api.registry` to the rollout protocol, so
+the measured program is exactly the inference the serving backend's
+`_policy_prog` jit boundary pays per arriving task. Reports p50/p95/p99 and
+mean seconds per decision and writes `BENCH_decision_latency.json`.
+
+The paper's ordering (Greedy > EAT > EAT-A > EAT-DA ~ PPO > Random ~
+meta-heuristics) comes from: Greedy enumerates candidate futures, the
 diffusion policies run the T=10 denoise chain, the attention encoder adds a
-little on top of the MLP encoder, and the precomputed-sequence methods do no
-inference at all.
+little on top of the MLP encoder, and the precomputed-sequence methods only
+index a replay buffer.
 """
 from __future__ import annotations
 
-import time
-from typing import Dict
+import warnings
+from typing import Dict, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import agent as AG
-from repro.core import baselines as BL
-from repro.core import env as EV
-from repro.core import ppo as PPO
-from repro.core import sac as SAC
-from repro.core.workload import TraceConfig, make_trace
+try:        # `python benchmarks/bench_decision_latency.py` (script dir)
+    from common import make_env_cfg, make_trace_cfg, write_bench_json
+except ImportError:     # `python -m benchmarks...` (package)
+    from benchmarks.common import (make_env_cfg, make_trace_cfg,
+                                   write_bench_json)
+from repro.api import registry as REG
+from repro.core.workload import make_trace
+from repro.telemetry.profile import profile_policy
 
-
-def _time_fn(fn, iters: int = 50) -> float:
-    fn()  # compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        fn()
-    return (time.perf_counter() - t0) / iters
+#: eat ablation variants ride along with the registered names — same
+#: builder, different AgentConfig.variant
+EAT_VARIANTS = ("eat", "eat-a", "eat-d", "eat-da")
 
 
-def run(verbose: bool = True, num_servers: int = 4) -> Dict[str, float]:
-    ecfg = EV.EnvConfig(num_servers=num_servers)
-    trace = make_trace(jax.random.PRNGKey(0),
-                       TraceConfig(max_servers=num_servers))
-    state = EV.reset(ecfg)
-    obs = EV.observe(ecfg, trace, state)
-    key = jax.random.PRNGKey(1)
-    out: Dict[str, float] = {}
+def _specs(policies: Optional[Sequence] = None) -> List:
+    if policies is not None:
+        return list(policies)
+    from repro.api import PolicySpec
+    # offline meta-heuristics: tiny resolve-time optimisation budget — the
+    # measured program (sequence_policy indexing) is identical regardless
+    small = {"genetic": {"seq_len": 64, "generations": 2, "population": 8},
+             "harmony": {"seq_len": 64, "improvisations": 4,
+                         "memory_size": 8}}
+    specs = []
+    for name in REG.available_policies():
+        if name == "eat":
+            specs.extend(PolicySpec("eat", options={"variant": v})
+                         for v in EAT_VARIANTS)
+        else:
+            specs.append(PolicySpec(name, options=small.get(name, {})))
+    return specs
 
-    for variant in ("eat", "eat-a", "eat-d", "eat-da"):
-        acfg = AG.AgentConfig(variant=variant)
-        params = AG.init_actor(jax.random.PRNGKey(2), ecfg, acfg)
-        out[variant] = _time_fn(lambda: jax.block_until_ready(
-            SAC.policy_act(params, obs, key, ecfg=ecfg, acfg=acfg)))
 
-    st = PPO.init_ppo(jax.random.PRNGKey(3), ecfg)
-    out["ppo"] = _time_fn(lambda: jax.block_until_ready(
-        PPO.ppo_act(st.params, obs, key, ecfg=ecfg)[0]))
+def run(verbose: bool = True, num_servers: int = 4, iters: int = 50,
+        policies: Optional[Sequence] = None) -> Dict[str, Dict[str, float]]:
+    ecfg = make_env_cfg(num_servers)
+    tcfg = make_trace_cfg(num_servers, 0.75)
+    trace = make_trace(jax.random.PRNGKey(0), tcfg)
+    trace_fn = lambda key: make_trace(key, tcfg)  # noqa: E731
 
-    out["greedy"] = _time_fn(lambda: jax.block_until_ready(
-        BL.greedy_act(ecfg, trace, state)))
-    out["random"] = _time_fn(lambda: jax.block_until_ready(
-        BL.random_policy(key, ecfg)))
-    out["genetic"] = 0.0   # precomputed sequence: no run-time inference
-    out["harmony"] = 0.0
+    out: Dict[str, Dict[str, float]] = {}
+    for spec in _specs(policies):
+        label = spec if isinstance(spec, str) else (
+            spec.options.get("variant", spec.name))
+        with warnings.catch_warnings():
+            # untrained weights are fine: latency depends on architecture,
+            # not on weight values
+            warnings.simplefilter("ignore", REG.UntrainedPolicyWarning)
+            rp = REG.resolve(spec, ecfg, trace_fn=trace_fn)
+        out[label] = profile_policy(ecfg, rp.policy, rp.params,
+                                    jax.random.PRNGKey(1), trace=trace,
+                                    iters=iters)
+        out[label]["kind"] = rp.kind
 
     if verbose:
         print("Table XII — scheduler decision latency (s/decision)")
-        for k in ("greedy", "eat", "eat-a", "eat-d", "eat-da", "ppo",
-                  "random", "genetic", "harmony"):
-            print(f"| {k:8s} | {out[k]:.2e} |")
+        print("| policy   |     mean |      p50 |      p99 |")
+        print("|----------|----------|----------|----------|")
+        for k, m in sorted(out.items(),
+                           key=lambda kv: -kv[1]["decision_latency_mean_s"]):
+            print(f"| {k:8s} | {m['decision_latency_mean_s']:.2e} "
+                  f"| {m['decision_latency_p50_s']:.2e} "
+                  f"| {m['decision_latency_p99_s']:.2e} |")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    res = run()
+    write_bench_json("decision_latency",
+                     {"policies": res, "iters": 50, "num_servers": 4})

@@ -10,6 +10,8 @@ from __future__ import annotations
 import functools
 import json
 import os
+import platform
+import subprocess
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -31,6 +33,22 @@ ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 SCHED_DIR = os.path.join(ART, "scheduling")
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
+#: bench-record schema: 1 = pre-provenance records (no git_sha/platform);
+#: 2 adds schema_version, git_sha, platform, python_version, cpu_count.
+#: Existing BENCH_*.json files are NOT regenerated — a missing
+#: schema_version means a v1 record.
+BENCH_SCHEMA_VERSION = 2
+
+
+@functools.lru_cache(maxsize=1)
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT, timeout=10,
+            capture_output=True, text=True, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
 
 def write_bench_json(name: str, payload: Dict, out: Optional[str] = None,
                      fused: Optional[bool] = None,
@@ -38,15 +56,21 @@ def write_bench_json(name: str, payload: Dict, out: Optional[str] = None,
     """Machine-readable perf record: BENCH_<name>.json at the repo root so
     the numbers are tracked across PRs. Adds a timestamp, jax version, the
     fused env-step flag (`fused=None` records the engine default), the
-    `repro.api` execution backend and the local device count, so perf
-    trajectories across PRs state exactly which engine + device layout
+    `repro.api` execution backend, the local device count, and provenance
+    (schema version, git SHA, platform, Python, CPU count), so perf
+    trajectories across PRs state exactly which code + engine + machine
     produced them."""
     path = out or os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     payload = dict(payload)
     payload.setdefault("bench", name)
+    payload.setdefault("schema_version", BENCH_SCHEMA_VERSION)
     payload.setdefault("timestamp", time.strftime("%Y-%m-%dT%H:%M:%S"))
+    payload.setdefault("git_sha", _git_sha())
     payload.setdefault("jax_version", jax.__version__)
     payload.setdefault("backend", jax.default_backend())
+    payload.setdefault("platform", platform.platform())
+    payload.setdefault("python_version", platform.python_version())
+    payload.setdefault("cpu_count", os.cpu_count())
     # batch_rollout defaults to the fused engine; None = "ran on default"
     payload.setdefault("env_step_fused", True if fused is None else bool(fused))
     if exec_backend is None:

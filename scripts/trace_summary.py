@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Summarise a telemetry trace file: per-span wall-time breakdown.
+
+    PYTHONPATH=src python scripts/trace_summary.py trace.json [--validate]
+
+Reads a Chrome trace-event JSON (or its JSONL sidecar) emitted by
+`repro.telemetry` and prints one row per span name — count, total, mean,
+and self time (total minus directly nested spans) — sorted by self time,
+plus the final value of every counter track. `--validate` additionally
+schema-checks the file (strict span names) and exits non-zero on problems.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_events(path: str):
+    if path.endswith(".jsonl"):
+        with open(path) as f:
+            return [json.loads(line) for line in f if line.strip()]
+    with open(path) as f:
+        return json.load(f)["traceEvents"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="trace.json or trace.json.jsonl")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check the file (strict span names) first")
+    args = ap.parse_args(argv)
+
+    from repro.telemetry.schema import span_durations, validate_trace
+
+    if args.validate:
+        errors = validate_trace(args.trace, strict_names=True)
+        if errors:
+            print(f"INVALID trace {args.trace}:", file=sys.stderr)
+            for e in errors:
+                print(f"  {e}", file=sys.stderr)
+            return 1
+        print(f"trace OK: {args.trace}")
+
+    events = load_events(args.trace)
+    rows = span_durations(events)
+    if rows:
+        wall = max(r["total_s"] for r in rows.values())
+        print(f"{'span':<18s} {'count':>7s} {'total_s':>10s} "
+              f"{'mean_s':>10s} {'self_s':>10s} {'self%':>6s}")
+        for name, r in sorted(rows.items(),
+                              key=lambda kv: -kv[1]["self_total_s"]):
+            print(f"{name:<18s} {r['count']:7d} {r['total_s']:10.4f} "
+                  f"{r['mean_s']:10.6f} {r['self_total_s']:10.4f} "
+                  f"{100 * r['self_total_s'] / max(wall, 1e-12):5.1f}%")
+    counters = {}
+    for e in events:
+        if e.get("ph") == "C":
+            counters[e["name"]] = e["args"].get("value")
+    if counters:
+        print("\ncounters (final value):")
+        for k, v in sorted(counters.items()):
+            print(f"  {k} = {v}")
+    print(f"\n{sum(1 for e in events if e.get('ph') == 'X')} spans, "
+          f"{len(events)} events")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

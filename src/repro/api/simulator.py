@@ -31,6 +31,9 @@ from repro.api import backends as BK
 from repro.api import registry as REG
 from repro.api.specs import ExecSpec, PolicySpec, WorkloadSpec
 from repro.core.scenarios import Scenario, make_scenario_trace
+from repro.telemetry import metrics as MET
+from repro.telemetry import profile as PROF
+from repro.telemetry.trace import jax_profile, tracer_for
 from repro.traffic.arrivals import PoissonArrivals
 from repro.traffic.stream import ProcessTaskSource, StreamConfig, run_stream
 
@@ -92,6 +95,7 @@ class Simulator:
                 "serving backend runs ONE physical cluster; build the "
                 "workload with batch/streams=1, got "
                 f"{workload.batch}")
+        self.tracer = tracer_for(exec_spec.trace)
         self._rollout = BK.rollout_fn_for(exec_spec)
 
     # -- policy resolution against this workload's env ------------------
@@ -107,18 +111,47 @@ class Simulator:
 
     # -- runs ------------------------------------------------------------
     def run(self, policy: PolicyLike, key) -> SimResult:
-        rp = self.resolve(policy)
-        if hasattr(self._rollout, "reset"):
-            self._rollout.reset()    # serving: fresh cluster per run, so a
-            #                          sweep's policies never inherit a warm
-            #                          pool from the previous policy
-        t0 = time.perf_counter()
-        if self.workload.mode == "episodic":
-            res = self._run_episodic(rp, key)
-        else:
-            res = self._run_streaming(rp, key)
-        res.wall_s = time.perf_counter() - t0
+        tcfg = self.exec_spec.trace
+        with self.tracer.span(
+                "run", cat="run", mode=self.workload.mode,
+                backend=self.exec_spec.backend, cell=self.scenario.name):
+            with self.tracer.span("resolve_policy", cat="run"):
+                rp = self.resolve(policy)
+            if hasattr(self._rollout, "reset"):
+                self._rollout.reset()  # serving: fresh cluster per run, so
+                #                        a sweep's policies never inherit a
+                #                        warm pool from the previous policy
+            t0 = time.perf_counter()
+            with jax_profile(tcfg):
+                if self.workload.mode == "episodic":
+                    res = self._run_episodic(rp, key)
+                else:
+                    res = self._run_streaming(rp, key)
+            res.wall_s = time.perf_counter() - t0
+            if tcfg.enabled and tcfg.profile_decisions:
+                with self.tracer.span("profile_decisions", cat="profile",
+                                      policy=rp.name):
+                    res.summary.update(PROF.profile_policy(
+                        self.ecfg, rp.policy, rp.params,
+                        jax.random.fold_in(key, 0x9e77),
+                        iters=tcfg.profile_iters))
+        self._flush_telemetry()
         return res
+
+    def _labels(self, rp: REG.ResolvedPolicy) -> Dict[str, str]:
+        return {"policy": rp.name, "backend": self.exec_spec.backend,
+                "mode": self.workload.mode, "cell": self.scenario.name}
+
+    def _flush_telemetry(self) -> None:
+        """Rewrite the trace file and (when configured) the metrics
+        snapshots — called at every run end so a sweep's files are always
+        consistent on disk."""
+        self.tracer.write()
+        tcfg = self.exec_spec.trace
+        if tcfg.enabled and tcfg.metrics_path:
+            reg = MET.default_registry()
+            reg.write_prometheus(tcfg.metrics_path)
+            reg.write_jsonl(tcfg.metrics_path + ".jsonl")
 
     def sweep(self, policies: Sequence[PolicyLike], key) -> List[SimResult]:
         out = []
@@ -131,11 +164,18 @@ class Simulator:
         k_trace, k_run = jax.random.split(key)
         traces = jax.vmap(self.trace_fn())(jax.random.split(k_trace, wl.batch))
         keys = jax.random.split(k_run, wl.batch)
-        res = self._rollout(self.ecfg, traces, rp.policy, rp.params, keys,
-                            num_steps=wl.num_steps, collect=wl.collect)
+        with self.tracer.span("episodic_rollout", cat="rollout",
+                              policy=rp.name, batch=wl.batch):
+            res = self._rollout(self.ecfg, traces, rp.policy, rp.params, keys,
+                                num_steps=wl.num_steps, collect=wl.collect)
+            jax.block_until_ready(res.metrics)
         metrics = {k: np.asarray(v) for k, v in res.metrics.items()}
         summary = {f"mean_{k}": float(np.mean(v)) for k, v in metrics.items()}
         summary["n_episodes"] = wl.batch
+        if self.exec_spec.backend == "serving":
+            summary.update(self._rollout.serving_stats())
+        MET.publish_summary(summary, prefix="eat_episodic",
+                            labels=self._labels(rp))
         return SimResult(policy=rp.name, trained=rp.trained, kind=rp.kind,
                          mode="episodic", backend=self.exec_spec.backend,
                          scenario=self.scenario.name, summary=summary,
@@ -152,13 +192,23 @@ class Simulator:
                             max_carry=wl.max_carry, resp_sla=wl.resp_sla,
                             chunk_size=wl.chunk_size)
         res = run_stream(self.ecfg, rp.policy, rp.params, source, k_run,
-                         scfg, rollout_fn=self._rollout, collect=wl.collect)
+                         scfg, rollout_fn=self._rollout, collect=wl.collect,
+                         tracer=self.tracer)
         summary = dict(res.summary)
         summary["arrival"] = type(self.process).__name__
         summary["num_servers"] = self.ecfg.num_servers
         if self.exec_spec.backend == "serving":
             summary.update(self._rollout.serving_stats())
             summary["wall_clock"] = self.exec_spec.serving_wall_clock
+        labels = self._labels(rp)
+        res.aggregator.publish(labels=labels)
+        if self.exec_spec.backend == "serving":
+            ledger = self._rollout.pool_counters()
+            MET.publish_counters(ledger, prefix="eat_serving", labels=labels)
+            MET.publish_summary(
+                {k: v for k, v in self._rollout.serving_stats().items()
+                 if k not in ledger},
+                prefix="eat_serving", labels=labels)
         return SimResult(policy=rp.name, trained=rp.trained, kind=rp.kind,
                          mode="streaming", backend=self.exec_spec.backend,
                          scenario=self.scenario.name, summary=summary,

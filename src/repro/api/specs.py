@@ -23,6 +23,7 @@ from dataclasses import dataclass, field
 from typing import Any, Mapping, Optional
 
 from repro.core.scenarios import Scenario
+from repro.telemetry.trace import TraceConfig
 
 BACKENDS = ("reference", "fused", "sharded", "serving")
 #: batch-parallel simulated backends — "serving" drives ONE physical
@@ -134,6 +135,15 @@ class ExecSpec:
     `serving_archs=()` resolves to `common.config.ASSIGNED_ARCHS`;
     `serving_execute=False` skips real model execution (pure-mirror mode
     for fast parity checks — pool economics still accrue).
+
+    ``trace`` is the observability front door
+    (`repro.telemetry.TraceConfig`): with ``enabled=True`` every layer a
+    run touches — Simulator, StreamRunner, the streaming trainers, the
+    serving backend — emits host-side spans into ONE trace file
+    (Chrome trace-event JSON + JSONL), and `TraceConfig.profile_decisions`
+    adds a per-decision policy-inference latency probe to the result
+    summary. Disabled (the default) it is the shared no-op tracer: zero
+    overhead, bitwise-identical results.
     """
     backend: str = "fused"
     fused_impl: str = "auto"       # fused/sharded: "auto" | "ref" | "pallas"
@@ -146,6 +156,10 @@ class ExecSpec:
     serving_prompt_len: int = 8    # serving: synthetic prompt tokens
     serving_max_new_tokens: int = 16   # serving: request decode budget
     serving_seed: int = 0          # serving: prompt/weight-init PRNG seed
+    serving_warmup: Optional[bool] = None  # serving: pre-compile executor
+    #                                  programs before timing tasks (None =
+    #                                  on iff serving_wall_clock)
+    trace: TraceConfig = TraceConfig()  # telemetry front door (see above)
 
     def __post_init__(self):
         if self.backend not in BACKENDS:

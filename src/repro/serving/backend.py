@@ -53,21 +53,37 @@ from repro.core import quality as Q
 from repro.core.rollout import RolloutResult, Transitions
 from repro.serving.executor import ModelExecutor
 from repro.serving.pool import ServerPool
+from repro.telemetry.profile import DecisionProfile
+from repro.telemetry.trace import NULL_TRACER, tracer_for
 
 
 @functools.lru_cache(maxsize=None)
-def _decide_prog(ecfg: EV.EnvConfig, policy):
-    """One jitted program per (ecfg, policy): key split + policy + env step —
-    the same op sequence as one `rollout_episode` scan iteration, so the
-    virtual-time mirror reproduces the simulated rollout bitwise."""
+def _policy_prog(ecfg: EV.EnvConfig, policy):
+    """Policy inference alone, one jitted program per (ecfg, policy): the
+    key split + actor forward of one `rollout_episode` scan iteration.
+    Splitting it from the env advance (`_env_prog`) puts a jit boundary
+    exactly at the decision seam, so the host can wall-clock *inference*
+    latency per decision — the quantity `BENCH_decision_latency.json`
+    tracks — separately from env-advance time. The env's FMA/reciprocal
+    bitwise armor makes the split value-preserving: the two-program
+    decision reproduces the fused simulator bit-for-bit
+    (tests/test_serving_backend.py)."""
     @jax.jit
-    def decide(trace, state, q, obs, key, params):
+    def act(trace, state, obs, key, params):
         key, k_act = jax.random.split(key)
         action, extras = policy(params, k_act, trace, state, obs)
-        nstate, nq, nobs, r, d, info = EV.step_with_queue(
-            ecfg, trace, state, q, action)
-        return key, action, extras, nstate, nq, nobs, r, d, info
-    return decide
+        return key, action, extras
+    return act
+
+
+@functools.lru_cache(maxsize=None)
+def _env_prog(ecfg: EV.EnvConfig):
+    """The mirror env advance: `env.step_with_queue` on the pre-step queue
+    view — the second half of one `rollout_episode` scan iteration."""
+    @jax.jit
+    def step(trace, state, q, action):
+        return EV.step_with_queue(ecfg, trace, state, q, action)
+    return step
 
 
 @functools.lru_cache(maxsize=None)
@@ -121,7 +137,7 @@ class ServingRollout:
     def __init__(self, num_servers: int, *, archs=(), reduced: bool = True,
                  wall_clock: bool = False, execute: bool = True,
                  prompt_len: int = 8, max_new_tokens: int = 16,
-                 seed: int = 0):
+                 seed: int = 0, warmup: Optional[bool] = None, tracer=None):
         self.archs = tuple(archs) if archs else ASSIGNED_ARCHS
         self.reduced = reduced
         self.wall_clock = wall_clock
@@ -129,8 +145,14 @@ class ServingRollout:
         self.prompt_len = int(prompt_len)
         self.max_new_tokens = int(max_new_tokens)
         self.seed = int(seed)
+        # warmup pre-compiles executor programs outside the timed region so
+        # wall-clock latencies measure inference, not XLA compilation; it
+        # defaults on exactly when measured seconds feed the MDP
+        self.warmup = bool(wall_clock) if warmup is None else bool(warmup)
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self.pool = ServerPool(num_servers)
-        self.executor = ModelExecutor(reduced=reduced)
+        self.executor = ModelExecutor(reduced=reduced, tracer=self.tracer)
+        self.profile = DecisionProfile()
         self.tasks_executed = 0
         self.measured_busy: list = []       # wall seconds per executed task
         self._load_key = jax.random.PRNGKey(seed)
@@ -138,8 +160,11 @@ class ServingRollout:
 
     # ------------------------------------------------------------------
     def reset(self) -> None:
-        """Fresh cluster: unload every model, zero the ledgers."""
+        """Fresh cluster: unload every model, zero the ledgers. Compiled
+        executor programs (and the warmed-shape memo) survive — compilation
+        caches are process-level, not cluster state."""
         self.pool.reset()
+        self.profile = DecisionProfile()
         self.tasks_executed = 0
         self.measured_busy = []
         self._load_key = jax.random.PRNGKey(self.seed)
@@ -150,7 +175,13 @@ class ServingRollout:
         out["tasks_executed"] = self.tasks_executed
         if self.measured_busy:
             out["measured_busy_mean_s"] = float(np.mean(self.measured_busy))
+        out.update(self.profile.summary())
         return out
+
+    def pool_counters(self) -> Dict[str, int]:
+        """The pool's monotonic load/reuse/shed ledger alone (metrics
+        registry counters; `serving_stats` adds derived scalars)."""
+        return dict(self.pool.counters())
 
     # ------------------------------------------------------------------
     def _arch_of(self, m_k: int) -> str:
@@ -162,6 +193,14 @@ class ServingRollout:
         Returns measured wall seconds of the load + generate work."""
         arch = self._arch_of(m_k)
         gang = [self.pool.servers[i] for i in np.flatnonzero(sel)]
+        if self.execute and self.warmup:
+            # compile prefill/decode for this shape bucket BEFORE the timer:
+            # the first task of an (arch, shape) pair must not bill XLA
+            # compilation as serving latency
+            with self.tracer.span("executor_warmup", cat="serving",
+                                  arch=arch, c=int(c_k)):
+                self.executor.warm(arch, self.prompt_len, c_k, steps,
+                                   self.max_new_tokens)
         t0 = time.perf_counter()
         if reuse:
             self.pool.reuse_count += 1
@@ -188,8 +227,9 @@ class ServingRollout:
         return time.perf_counter() - t0
 
     def _load(self, server, arch: str) -> None:
-        self._load_key, k = jax.random.split(self._load_key)
-        server.params = self.executor.init_params(arch, k)
+        with self.tracer.span("model_load", cat="serving", arch=arch):
+            self._load_key, k = jax.random.split(self._load_key)
+            server.params = self.executor.init_params(arch, k)
         server.model_name = arch
         self.pool.load_count += 1
 
@@ -213,27 +253,47 @@ class ServingRollout:
         state = (EV.reset(ecfg) if init_state is None
                  else jax.tree_util.tree_map(lambda x: x[0], init_state))
         q, obs = EV.reset_view(ecfg, trace, state)
-        decide = _decide_prog(ecfg, policy)
+        act = _policy_prog(ecfg, policy)
+        env_step = _env_prog(ecfg)
         wall_patch = _wall_patch_prog(ecfg)
+        tr = self.tracer
 
         done = False
         total = np.float32(0.0)
         length = 0
         rows = [] if collect else None
-        for _ in range(T):
-            key, action, extras, nstate, nq, nobs, r, d, info = decide(
-                trace, state, q, obs, key, params)
+        for t_i in range(T):
+            t0 = time.perf_counter()
+            with tr.span("decision", cat="serving", step=t_i):
+                key, action, extras = act(trace, state, obs, key, params)
+                jax.block_until_ready(action)
+            self.profile.observe("policy", time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            with tr.span("env_advance", cat="serving", step=t_i):
+                nstate, nq, nobs, r, d, info = env_step(
+                    trace, state, q, action)
+                jax.block_until_ready(r)
+            self.profile.observe("env_advance", time.perf_counter() - t0)
             if not done and bool(info["scheduled"]):
                 k_task = info["task"]
                 sel = np.asarray(nstate.server_gang == k_task)
-                busy = self._run_task(
-                    int(trace["model"][k_task]), int(trace["c"][k_task]),
-                    int(info["steps"]), sel, bool(info["reuse"]))
+                with tr.span("execute_task", cat="serving", step=t_i,
+                             task=int(k_task),
+                             arch=self._arch_of(int(trace["model"][k_task])),
+                             c=int(trace["c"][k_task]),
+                             steps=int(info["steps"]),
+                             reuse=bool(info["reuse"])):
+                    busy = self._run_task(
+                        int(trace["model"][k_task]), int(trace["c"][k_task]),
+                        int(info["steps"]), sel, bool(info["reuse"]))
+                self.profile.observe("executor", busy)
                 if self.wall_clock:
                     self.measured_busy.append(busy)
-                    nstate, nq, nobs, r, d = wall_patch(
-                        trace, q, nstate, k_task, jnp.asarray(sel),
-                        jnp.float32(busy))
+                    with tr.span("wall_patch", cat="serving", step=t_i,
+                                 busy_s=busy):
+                        nstate, nq, nobs, r, d = wall_patch(
+                            trace, q, nstate, k_task, jnp.asarray(sel),
+                            jnp.float32(busy))
             if done:       # frozen episode: replay the carried state
                 nstate, nq, nobs = state, q, obs
                 r = jnp.float32(0.0)
@@ -303,7 +363,9 @@ def _from_spec(spec) -> "ServingRollout":
                     execute=spec.serving_execute,
                     prompt_len=spec.serving_prompt_len,
                     max_new_tokens=spec.serving_max_new_tokens,
-                    seed=spec.serving_seed)
+                    seed=spec.serving_seed,
+                    warmup=getattr(spec, "serving_warmup", None),
+                    tracer=tracer_for(getattr(spec, "trace", None)))
             return self.inner
 
         def __call__(self, ecfg, traces, policy, params, keys, **kw):
@@ -316,5 +378,8 @@ def _from_spec(spec) -> "ServingRollout":
 
         def serving_stats(self):
             return self.inner.serving_stats() if self.inner else {}
+
+        def pool_counters(self):
+            return self.inner.pool_counters() if self.inner else {}
 
     return _Lazy()

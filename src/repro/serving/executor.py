@@ -35,6 +35,7 @@ import numpy as np
 from repro.common.config import get_config
 from repro.models.lm import period_spec
 from repro.models.zoo import Model, build_model
+from repro.telemetry.trace import NULL_TRACER
 
 # decode-capacity rounding: buckets cache shapes so jit re-traces per
 # capacity bucket, not per (steps, max_new_tokens) pair. Value-safe: decode
@@ -84,11 +85,14 @@ class ModelExecutor:
     through the same compiled prefill/decode programs (shapes permitting),
     so a stream pays tracing once per (arch, shape bucket)."""
 
-    def __init__(self, reduced: bool = True):
+    def __init__(self, reduced: bool = True, tracer=None):
         self.reduced = reduced
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self._models: Dict[str, Model] = {}
         self._prefill: Dict[str, Callable] = {}
         self._decode: Dict[str, Callable] = {}
+        self._warm_params: Dict[str, object] = {}   # throwaway compile params
+        self._warmed: set = set()                   # shape buckets compiled
 
     def model(self, arch: str) -> Model:
         if arch not in self._models:
@@ -107,6 +111,44 @@ class ModelExecutor:
         """Real weight materialisation — the cold-start cost being scheduled
         around (the Table-VI init_time stands in for its wall-clock)."""
         return self.model(arch).init(key)
+
+    # ------------------------------------------------------------------
+    def shape_key(self, arch: str, prompt_len: int, c: int, steps: int,
+                  max_new_tokens: int) -> tuple:
+        """The compilation bucket a `generate` call lands in: jit retraces
+        once per (arch, chunk shape, cache capacity), so two calls with the
+        same key reuse the same compiled prefill + decode programs."""
+        c = max(int(c), 1)
+        S_pad = int(prompt_len) + ((-int(prompt_len)) % c)
+        capacity = S_pad + _round_up(max(int(steps), int(max_new_tokens)),
+                                     _CAP_ROUND)
+        use_chunked = chunkable(self.model(arch).cfg)
+        return (arch, c if use_chunked else 1, S_pad, capacity)
+
+    def warm(self, arch: str, prompt_len: int, c: int, steps: int,
+             max_new_tokens: int) -> bool:
+        """Pre-compile the prefill/decode programs a `generate` with these
+        arguments would hit; returns True when compilation actually ran.
+
+        Runs one throwaway single-step generate with per-arch cached dummy
+        params (identical shapes, so the jit cache hits) against the SAME
+        chunk shape and cache capacity: `max_new_tokens` is inflated to
+        keep the capacity bucket fixed while `steps=1` bounds the warm
+        decode work. Uses `jax.random.PRNGKey(0)` directly — the serving
+        backend's `_load_key` stream is untouched, so warmed and unwarmed
+        runs schedule identically."""
+        k = self.shape_key(arch, prompt_len, c, steps, max_new_tokens)
+        if k in self._warmed:
+            return False
+        _arch, _c, S_pad, capacity = k
+        if arch not in self._warm_params:
+            self._warm_params[arch] = self.init_params(
+                arch, jax.random.PRNGKey(0))
+        prompt = np.zeros(int(prompt_len), np.int32)
+        self.generate(arch, self._warm_params[arch], prompt, c, 1,
+                      capacity - S_pad)
+        self._warmed.add(k)
+        return True
 
     # ------------------------------------------------------------------
     def _full_batch(self, cfg, prompt: np.ndarray) -> Dict:
@@ -136,25 +178,34 @@ class ModelExecutor:
                                      _CAP_ROUND)
         use_chunked = (chunkable(cfg) if force_chunked is None
                        else force_chunked)
-        if use_chunked:
-            # left-pad so the prompt's true final token ends the last chunk —
-            # its last-position logits are the next-token distribution
-            chunks = jnp.asarray(np.pad(prompt, (pad, 0)).reshape(c, -1))
-            ccache = model.make_cache(c, chunks.shape[1], dtype=jnp.float32)
-            logits, ccache = self._prefill[arch](
-                params, {"tokens": chunks}, ccache)
-            cache = _merge_chunk_cache(model, ccache, S_pad, capacity)
-            logits = logits[-1:]     # the prompt's last token ends chunk c-1
-        else:
-            cache = model.make_cache(1, capacity, dtype=jnp.float32)
-            logits, cache = self._prefill[arch](
-                params, self._full_batch(cfg, prompt), cache)
+        tr = self.tracer
+        with tr.span("prefill", cat="serving", arch=arch, c=c,
+                     seq=S_pad, chunked=bool(use_chunked)):
+            if use_chunked:
+                # left-pad so the prompt's true final token ends the last
+                # chunk — its last-position logits are the next-token
+                # distribution
+                chunks = jnp.asarray(np.pad(prompt, (pad, 0)).reshape(c, -1))
+                ccache = model.make_cache(c, chunks.shape[1],
+                                          dtype=jnp.float32)
+                logits, ccache = self._prefill[arch](
+                    params, {"tokens": chunks}, ccache)
+                cache = _merge_chunk_cache(model, ccache, S_pad, capacity)
+                logits = logits[-1:]  # prompt's last token ends chunk c-1
+            else:
+                cache = model.make_cache(1, capacity, dtype=jnp.float32)
+                logits, cache = self._prefill[arch](
+                    params, self._full_batch(cfg, prompt), cache)
+            if tr.enabled:   # wall attribution only: sync inside the span
+                jax.block_until_ready(logits)
         out = []
         tok = jnp.argmax(logits[:, -1:, : cfg.vocab_size],
                          axis=-1).astype(jnp.int32)
-        for _ in range(steps):
-            out.append(int(tok[0, 0]))
-            logits, cache = self._decode[arch](params, cache, tok)
-            tok = jnp.argmax(logits[:, -1:, : cfg.vocab_size],
-                             axis=-1).astype(jnp.int32)
+        with tr.span("decode", cat="serving", arch=arch, steps=steps,
+                     capacity=capacity):
+            for _ in range(steps):
+                out.append(int(tok[0, 0]))
+                logits, cache = self._decode[arch](params, cache, tok)
+                tok = jnp.argmax(logits[:, -1:, : cfg.vocab_size],
+                                 axis=-1).astype(jnp.int32)
         return np.asarray(out, np.int32)

@@ -1,0 +1,39 @@
+"""repro.telemetry — structured tracing, unified metrics, decision profiling.
+
+The observability substrate every layer reports through:
+
+* `trace` — span-based tracer emitting Chrome trace-event JSON
+  (perfetto-loadable) + JSONL, recorded only at jit boundaries; zero
+  overhead when disabled. Front door: ``ExecSpec(trace=TraceConfig(...))``.
+* `metrics` — one labelled counters/gauges/histograms registry that the
+  stream aggregator, serving pool, and streaming trainers publish into;
+  Prometheus text + JSONL snapshot export.
+* `profile` — per-decision policy-inference latency (the diffusion
+  actor's K-denoise-step cost vs greedy/fifo), split from env-advance and
+  executor wall time.
+* `schema` — the machine-readable trace schema + dependency-free
+  validator CI gates emitted files with.
+"""
+from repro.telemetry.metrics import (DEFAULT_EDGES, Counter, Gauge,
+                                     Histogram, LatencyHistogram,
+                                     MetricsRegistry, default_registry,
+                                     parse_prometheus, publish_counters,
+                                     publish_summary)
+from repro.telemetry.profile import (DECISION_EDGES, DecisionProfile,
+                                     profile_policy)
+from repro.telemetry.schema import (KNOWN_SPANS, TRACE_SCHEMA,
+                                    assert_valid_trace, span_durations,
+                                    validate_trace)
+from repro.telemetry.trace import (NULL_TRACER, TraceConfig, Tracer,
+                                   jax_profile, reset_tracers, tracer_for)
+
+__all__ = [
+    "TraceConfig", "Tracer", "NULL_TRACER", "tracer_for", "reset_tracers",
+    "jax_profile",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "LatencyHistogram",
+    "DEFAULT_EDGES", "default_registry",
+    "parse_prometheus", "publish_summary", "publish_counters",
+    "DecisionProfile", "profile_policy", "DECISION_EDGES",
+    "KNOWN_SPANS", "TRACE_SCHEMA", "validate_trace", "assert_valid_trace",
+    "span_durations",
+]

@@ -1,0 +1,117 @@
+"""Decision-latency profiling: how long does the scheduler take to decide?
+
+EAT's QoS accounting (Eq. 4a) treats the scheduler itself as free, but the
+diffusion actor pays K denoise steps per decision — at high arrival rates
+that inference cost, not env throughput, bounds the achievable line rate
+("Accelerating AIGC Services with Latent Action Diffusion", PAPERS.md).
+This module measures it:
+
+* `DecisionProfile` — streaming histograms (`LatencyHistogram` on
+  decision-scaled log edges) of the three per-decision phases the serving
+  backend can split at its jit boundaries: `policy` (inference),
+  `env_advance` (mirror decision step), `executor` (real model work).
+* `profile_policy` — the standalone probe: wall-clocks one scheduling
+  decision (state -> action) of any rollout-protocol policy on a
+  representative (trace, state, obs), one jitted program per policy,
+  compile excluded. `benchmarks/bench_decision_latency.py` sweeps it over
+  the registry; `Simulator` runs it post-run when
+  `TraceConfig(profile_decisions=True)` and folds the percentiles into
+  the result summary / sweep rows.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.telemetry.metrics import LatencyHistogram
+
+# decision latencies live in microseconds..seconds, two decades below the
+# QoS response-latency edges — ~10 log-bins per decade across 1e-6..1e2 s
+DECISION_EDGES = np.geomspace(1e-6, 1e2, 81).astype(np.float64)
+
+PHASES = ("policy", "env_advance", "executor")
+
+
+class DecisionProfile:
+    """Per-phase streaming latency histograms with percentile summaries."""
+
+    def __init__(self):
+        self.hists: Dict[str, LatencyHistogram] = {
+            p: LatencyHistogram(DECISION_EDGES) for p in PHASES}
+        self.sums: Dict[str, float] = {p: 0.0 for p in PHASES}
+
+    def observe(self, phase: str, seconds: float) -> None:
+        self.hists[phase].add_values([seconds])
+        self.sums[phase] += float(seconds)
+
+    def counts(self, phase: str) -> int:
+        return self.hists[phase].total
+
+    def summary(self) -> Dict[str, float]:
+        """Flat scalars: `<phase>_latency_{p50,p95,p99,mean}_s` + counts,
+        with the policy phase doubled under the headline `decision_*`
+        names every consumer keys on."""
+        out: Dict[str, float] = {}
+        for p in PHASES:
+            h = self.hists[p]
+            if h.total == 0:
+                continue
+            out[f"{p}_latency_p50_s"] = h.percentile(0.50)
+            out[f"{p}_latency_p95_s"] = h.percentile(0.95)
+            out[f"{p}_latency_p99_s"] = h.percentile(0.99)
+            out[f"{p}_latency_mean_s"] = self.sums[p] / h.total
+            out[f"{p}_decisions"] = float(h.total)
+        for k in ("p50", "p95", "p99", "mean"):
+            src = f"policy_latency_{k}_s"
+            if src in out:
+                out[f"decision_latency_{k}_s"] = out[src]
+        return out
+
+
+# ----------------------------------------------------------------------
+def profile_policy(ecfg, policy, params, key, *, trace=None, state=None,
+                   iters: int = 50, warmup: int = 2) -> Dict[str, float]:
+    """Wall-clock `iters` single decisions of one rollout-protocol policy.
+
+    The probe jits `policy(params, key, trace, state, obs)` alone — no env
+    step, no executor — so the number is pure inference latency at the
+    host's jit boundary, the cost a line-rate scheduler pays per arriving
+    task. Returns `decision_latency_{p50,p95,p99,mean}_s` (+ `_n`).
+    """
+    import jax
+
+    from repro.core import env as EV
+    from repro.core.workload import TraceConfig, make_trace
+
+    if trace is None:
+        trace = make_trace(jax.random.PRNGKey(0),
+                           TraceConfig(num_tasks=ecfg.max_tasks,
+                                       max_servers=ecfg.num_servers,
+                                       num_models=ecfg.num_models))
+    if state is None:
+        state = EV.reset(ecfg)
+    _, obs = EV.reset_view(ecfg, trace, state)
+
+    prog = jax.jit(lambda p, k: policy(p, k, trace, state, obs)[0])
+    jax.block_until_ready(prog(params, key))          # compile
+    for _ in range(warmup):
+        jax.block_until_ready(prog(params, key))
+
+    hist = LatencyHistogram(DECISION_EDGES)
+    total = 0.0
+    for i in range(iters):
+        k = jax.random.fold_in(key, i)
+        t0 = time.perf_counter()
+        jax.block_until_ready(prog(params, k))
+        dt = time.perf_counter() - t0
+        hist.add_values([dt])
+        total += dt
+    return {
+        "decision_latency_p50_s": hist.percentile(0.50),
+        "decision_latency_p95_s": hist.percentile(0.95),
+        "decision_latency_p99_s": hist.percentile(0.99),
+        "decision_latency_mean_s": total / max(iters, 1),
+        "decision_latency_n": float(iters),
+    }

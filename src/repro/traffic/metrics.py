@@ -14,8 +14,9 @@ from typing import Dict, Optional
 
 import numpy as np
 
-# 60 log-spaced bins across 0.1 s .. 1e5 s, plus underflow/overflow slots.
-DEFAULT_EDGES = np.geomspace(1e-1, 1e5, 61).astype(np.float32)
+# histogram primitives live in the telemetry layer since the telemetry PR;
+# re-exported here (their historical home) for every existing consumer
+from repro.telemetry.metrics import DEFAULT_EDGES, LatencyHistogram  # noqa: F401
 
 
 def bucketize_counts(values, mask, edges):
@@ -28,40 +29,6 @@ def bucketize_counts(values, mask, edges):
     idx = jnp.searchsorted(jnp.asarray(edges), values)
     return jnp.zeros((len(edges) + 1,), jnp.int32).at[idx].add(
         mask.astype(jnp.int32))
-
-
-class LatencyHistogram:
-    """Fixed-bin streaming histogram with percentile estimation."""
-
-    def __init__(self, edges: Optional[np.ndarray] = None):
-        self.edges = np.asarray(DEFAULT_EDGES if edges is None else edges,
-                                np.float64)
-        self.counts = np.zeros(len(self.edges) + 1, np.int64)
-
-    @property
-    def total(self) -> int:
-        return int(self.counts.sum())
-
-    def add_counts(self, counts) -> None:
-        self.counts += np.asarray(counts, np.int64)
-
-    def add_values(self, values) -> None:
-        idx = np.searchsorted(self.edges, np.asarray(values, np.float64))
-        np.add.at(self.counts, idx, 1)
-
-    def percentile(self, q: float) -> float:
-        """q in [0, 1]; linear interpolation inside the resolved bin."""
-        total = self.total
-        if total == 0:
-            return float("nan")
-        target = q * total
-        cum = np.cumsum(self.counts)
-        i = int(np.searchsorted(cum, target, side="left"))
-        lo = self.edges[i - 1] if i >= 1 else 0.0
-        hi = self.edges[i] if i < len(self.edges) else self.edges[-1]
-        prev = cum[i - 1] if i >= 1 else 0
-        frac = (target - prev) / max(int(self.counts[i]), 1)
-        return float(lo + np.clip(frac, 0.0, 1.0) * (hi - lo))
 
 
 # ----------------------------------------------------------------------
@@ -147,3 +114,20 @@ class StreamAggregator:
             "q_min": self.q_min,
             "resp_sla": self.resp_sla,
         }
+
+    # -- unified metrics registry -----------------------------------------
+    def publish(self, labels: Optional[Dict[str, str]] = None,
+                registry=None) -> None:
+        """Publish this aggregator's summary (gauges ``eat_stream_<key>``)
+        and its raw latency histogram (``eat_stream_latency_seconds``
+        buckets) into the unified telemetry registry
+        (`repro.telemetry.metrics`; None = the process default)."""
+        from repro.telemetry import metrics as TM
+        TM.publish_summary(self.summary(), prefix="eat_stream",
+                           labels=labels, registry=registry)
+        reg = registry or TM.default_registry()
+        reg.histogram("eat_stream_latency_seconds",
+                      "scheduled-task response latency",
+                      edges=self.hist.edges).observe_counts(
+            self.hist.counts, approx_sum=self.totals["sum_resp"],
+            labels=labels)

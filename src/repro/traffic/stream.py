@@ -33,6 +33,7 @@ from repro.core import env as EV
 from repro.core import rollout as RO
 from repro.core.rollout import Transitions
 from repro.core.workload import TraceConfig, sample_task_attrs
+from repro.telemetry.trace import NULL_TRACER
 from repro.traffic import metrics as MX
 
 _COLS = ("arr_time", "c", "model", "noise")
@@ -275,7 +276,8 @@ class StreamRunner:
     """
 
     def __init__(self, ecfg: EV.EnvConfig, policy, params, source, key,
-                 scfg: StreamConfig = StreamConfig(), rollout_fn=None):
+                 scfg: StreamConfig = StreamConfig(), rollout_fn=None,
+                 tracer=None):
         K, B = ecfg.max_tasks, scfg.num_streams
         max_carry = K // 2 if scfg.max_carry is None else int(scfg.max_carry)
         if not 0 <= max_carry < K:
@@ -284,6 +286,7 @@ class StreamRunner:
         self.policy, self.params = policy, params
         self.source, self.key = source, key
         self.rollout_fn = rollout_fn
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self.K, self.B = K, B
         self.T = scfg.max_steps_per_window or min(4 * K, ecfg.max_steps)
         self.max_carry = max_carry
@@ -337,26 +340,47 @@ class StreamRunner:
         if params is not None:
             self.params = params
         w = self.window
-        cols, n_injected, n_dropped, n_carried = self._build_window()
-        traces = {c: jnp.asarray(v) for c, v in cols.items()}
-        keys = jax.random.split(jax.random.fold_in(self.key, w), self.B)
-        if self.rollout_fn is None:
-            res = RO.batch_rollout(self.ecfg, traces, self.policy,
-                                   self.params, keys, num_steps=self.T,
-                                   init_state=self.carry, collect=collect,
-                                   fused=self.scfg.fused)
-        else:
-            res = self.rollout_fn(self.ecfg, traces, self.policy,
-                                  self.params, keys, num_steps=self.T,
-                                  init_state=self.carry, collect=collect)
-        stats, self.carry, lcols, n_left = _window_seam(
-            self.ecfg, traces, res.final_state, self._edges, self._sla)
-        n_left = np.asarray(n_left)
-        lcols = {c: np.asarray(v) for c, v in lcols.items()}
-        self.leftovers = [{c: lcols[c][b, :n_left[b]] for c in _COLS}
-                          for b in range(self.B)]
-        self.t0 += np.asarray(stats["elapsed"], np.float64)
+        tr = self.tracer
+        wspan = tr.span("window", cat="stream", window=w,
+                        backend=getattr(self.rollout_fn, "backend",
+                                        "fused" if self.scfg.fused
+                                        else "reference"))
+        with wspan:
+            with tr.span("build_window", cat="stream", window=w):
+                cols, n_injected, n_dropped, n_carried = self._build_window()
+                traces = {c: jnp.asarray(v) for c, v in cols.items()}
+                keys = jax.random.split(jax.random.fold_in(self.key, w),
+                                        self.B)
+            with tr.span("window_rollout", cat="rollout", window=w,
+                         streams=self.B, steps=self.T):
+                if self.rollout_fn is None:
+                    res = RO.batch_rollout(self.ecfg, traces, self.policy,
+                                           self.params, keys,
+                                           num_steps=self.T,
+                                           init_state=self.carry,
+                                           collect=collect,
+                                           fused=self.scfg.fused)
+                else:
+                    res = self.rollout_fn(self.ecfg, traces, self.policy,
+                                          self.params, keys,
+                                          num_steps=self.T,
+                                          init_state=self.carry,
+                                          collect=collect)
+                if tr.enabled:
+                    # wall-clock attribution only: make the async rollout
+                    # finish inside its span instead of inside the seam's
+                    jax.block_until_ready(res.final_state)
+            with tr.span("window_seam", cat="stream", window=w):
+                stats, self.carry, lcols, n_left = _window_seam(
+                    self.ecfg, traces, res.final_state, self._edges,
+                    self._sla)
+                n_left = np.asarray(n_left)
+                lcols = {c: np.asarray(v) for c, v in lcols.items()}
+                self.leftovers = [{c: lcols[c][b, :n_left[b]] for c in _COLS}
+                                  for b in range(self.B)]
+                self.t0 += np.asarray(stats["elapsed"], np.float64)
 
+        tr.counter("backlog", float(n_left.sum()), window=w)
         rec = {k: np.asarray(v) for k, v in stats.items()}
         rec["n_injected"] = n_injected
         rec["n_dropped"] = n_dropped
@@ -401,7 +425,8 @@ class StreamRunner:
 # ----------------------------------------------------------------------
 def run_stream(ecfg: EV.EnvConfig, policy, params, source, key,
                scfg: StreamConfig = StreamConfig(),
-               rollout_fn=None, collect: bool = False) -> StreamResult:
+               rollout_fn=None, collect: bool = False,
+               tracer=None) -> StreamResult:
     """Drive `num_windows` windows of K = ecfg.max_tasks tasks per stream.
 
     A thin loop over `StreamRunner.run_window`; see that class for the seam
@@ -412,7 +437,7 @@ def run_stream(ecfg: EV.EnvConfig, policy, params, source, key,
     drain each window into their replay buffer / GAE pool).
     """
     runner = StreamRunner(ecfg, policy, params, source, key, scfg,
-                          rollout_fn=rollout_fn)
+                          rollout_fn=rollout_fn, tracer=tracer)
     collected: Optional[List[Transitions]] = [] if collect else None
     for _ in range(scfg.num_windows):
         wres = runner.run_window(collect=collect)

@@ -46,6 +46,8 @@ from repro.core import sac as SAC
 from repro.core.replay import ReplayBuffer
 from repro.core.scenarios import Scenario
 from repro.core.workload import TraceConfig, paper_rate_for
+from repro.telemetry import metrics as MET
+from repro.telemetry.trace import tracer_for
 from repro.traffic import metrics as MX
 from repro.traffic.arrivals import PoissonArrivals, scale_rate
 from repro.traffic.stream import (CurriculumTaskSource, StreamConfig,
@@ -154,8 +156,9 @@ def _make_runner(ecfg, cells, key, stcfg: StreamTrainConfig, exec_spec,
         max_carry=stcfg.max_carry, resp_sla=stcfg.resp_sla,
         chunk_size=stcfg.chunk_size)
     rollout = rollout_fn_for(exec_spec or ExecSpec())
+    tracer = tracer_for(getattr(exec_spec, "trace", None))
     runner = StreamRunner(ecfg, policy, params, source, k_stream, scfg,
-                          rollout_fn=rollout)
+                          rollout_fn=rollout, tracer=tracer)
     return source, runner
 
 
@@ -169,6 +172,13 @@ def _round_row(r: int, cell_name: str, ragg: MX.StreamAggregator,
     rs = ragg.summary()
     row.update({k: rs[k] for k in QOS_KEYS})
     return row
+
+
+def _publish_round(row: Dict, algo: str) -> None:
+    """Round row -> unified metrics registry gauges (eat_train_*); the
+    registry snapshot is what `TraceConfig.metrics_path` exports."""
+    MET.publish_summary(row, prefix="eat_train",
+                        labels={"algo": algo, "cell": str(row["cell"])})
 
 
 def _log_row(tag: str, row: Dict) -> None:
@@ -230,23 +240,32 @@ def train_stream_sac(ecfg: EV.EnvConfig, acfg: AG.AgentConfig,
         ragg = MX.StreamAggregator(ecfg.num_servers, ecfg.q_min,
                                    stcfg.resp_sla)
         n_new, returns = 0, []
-        for _ in range(stcfg.windows_per_round):
-            wres = runner.run_window(policy=policy, params=params,
-                                     collect=True)
-            flat = SAC.flatten_valid_transitions(wres.transitions)
-            buffer.add_batch(*flat)
-            n_new += len(flat[2])
-            if transition_hook is not None:
-                transition_hook(r, flat)
-            ragg.update(wres.stats)
-            returns.append(wres.record["episode_return_mean"])
-        ts, key, n_upd = SAC.run_update_schedule(
-            ts, buffer, rng, key, n_new, ecfg=ecfg, acfg=acfg, scfg=scfg,
-            max_updates=stcfg.max_updates_per_round)
+        with runner.tracer.span("train_round", cat="train", algo="sac",
+                                round=r, cell=cells[ci][0],
+                                warmup=bool(warmup)):
+            for _ in range(stcfg.windows_per_round):
+                wres = runner.run_window(policy=policy, params=params,
+                                         collect=True)
+                flat = SAC.flatten_valid_transitions(wres.transitions)
+                with runner.tracer.span("replay_push", cat="train",
+                                        n=int(len(flat[2]))):
+                    buffer.add_batch(*flat)
+                n_new += len(flat[2])
+                if transition_hook is not None:
+                    transition_hook(r, flat)
+                ragg.update(wres.stats)
+                returns.append(wres.record["episode_return_mean"])
+            with runner.tracer.span("gradient_update", cat="train",
+                                    algo="sac", new_transitions=int(n_new)):
+                ts, key, n_upd = SAC.run_update_schedule(
+                    ts, buffer, rng, key, n_new, ecfg=ecfg, acfg=acfg,
+                    scfg=scfg, max_updates=stcfg.max_updates_per_round)
         row = _round_row(r, cells[ci][0], ragg, runner, returns, n_new,
                          n_upd)
         row.update(warmup=bool(warmup), buffer_size=buffer.size)
         history.append(row)
+        _publish_round(row, "sac")
+        runner.tracer.write()
         if callback:
             callback(r, row, ts)
         if stcfg.log_every and r % stcfg.log_every == 0:
@@ -285,30 +304,38 @@ def train_stream_ppo(ecfg: EV.EnvConfig, pcfg: PPO.PPOConfig,
         ragg = MX.StreamAggregator(ecfg.num_servers, ecfg.q_min,
                                    stcfg.resp_sla)
         datas, returns, n_new = [], [], 0
-        for _ in range(stcfg.windows_per_round):
-            wres = runner.run_window(params=st.params, collect=True)
-            tr = wres.transitions
-            if transition_hook is not None:
-                transition_hook(r, SAC.flatten_valid_transitions(tr))
-            lens = np.asarray(tr.valid).sum(axis=1)
-            nobs = np.asarray(tr.next_obs)
-            last_nobs = nobs[np.arange(len(lens)),
-                             np.maximum(lens - 1, 0).astype(int)]
-            last_vals = np.asarray(PPO.value_of(st.params,
-                                                jnp.asarray(last_nobs)))
-            last_vals = np.where(lens > 0, last_vals, 0.0)
-            data = PPO.pool_gae(tr, pcfg, last_values=last_vals)
-            datas.append(data)
-            n_new += len(data["adv"])
-            ragg.update(wres.stats)
-            returns.append(wres.record["episode_return_mean"])
-        pooled = {k: np.concatenate([d[k] for d in datas])
-                  for k in datas[0]}
-        st, n_upd = PPO.run_ppo_epochs(st, pooled, rng, ecfg, pcfg,
-                                       max_updates=stcfg.max_updates_per_round)
+        with runner.tracer.span("train_round", cat="train", algo="ppo",
+                                round=r, cell=cells[ci][0]):
+            for _ in range(stcfg.windows_per_round):
+                wres = runner.run_window(params=st.params, collect=True)
+                tr = wres.transitions
+                if transition_hook is not None:
+                    transition_hook(r, SAC.flatten_valid_transitions(tr))
+                with runner.tracer.span("gae_pool", cat="train"):
+                    lens = np.asarray(tr.valid).sum(axis=1)
+                    nobs = np.asarray(tr.next_obs)
+                    last_nobs = nobs[np.arange(len(lens)),
+                                     np.maximum(lens - 1, 0).astype(int)]
+                    last_vals = np.asarray(PPO.value_of(st.params,
+                                                        jnp.asarray(last_nobs)))
+                    last_vals = np.where(lens > 0, last_vals, 0.0)
+                    data = PPO.pool_gae(tr, pcfg, last_values=last_vals)
+                datas.append(data)
+                n_new += len(data["adv"])
+                ragg.update(wres.stats)
+                returns.append(wres.record["episode_return_mean"])
+            pooled = {k: np.concatenate([d[k] for d in datas])
+                      for k in datas[0]}
+            with runner.tracer.span("gradient_update", cat="train",
+                                    algo="ppo", new_transitions=int(n_new)):
+                st, n_upd = PPO.run_ppo_epochs(
+                    st, pooled, rng, ecfg, pcfg,
+                    max_updates=stcfg.max_updates_per_round)
         row = _round_row(r, cells[ci][0], ragg, runner, returns, n_new,
                          n_upd)
         history.append(row)
+        _publish_round(row, "ppo")
+        runner.tracer.write()
         if callback:
             callback(r, row, st)
         if stcfg.log_every and r % stcfg.log_every == 0:
