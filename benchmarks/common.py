@@ -35,8 +35,7 @@ REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 #: bench-record schema: 1 = pre-provenance records (no git_sha/platform);
 #: 2 adds schema_version, git_sha, platform, python_version, cpu_count.
-#: Existing BENCH_*.json files are NOT regenerated — a missing
-#: schema_version means a v1 record.
+#: Every checked-in BENCH_*.json carries schema_version >= 2.
 BENCH_SCHEMA_VERSION = 2
 
 

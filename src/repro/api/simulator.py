@@ -31,6 +31,7 @@ from repro.api import backends as BK
 from repro.api import registry as REG
 from repro.api.specs import ExecSpec, PolicySpec, WorkloadSpec
 from repro.core.scenarios import Scenario, make_scenario_trace
+from repro.faults import FaultTimeline, fault_horizon, faults_active
 from repro.telemetry import metrics as MET
 from repro.telemetry import profile as PROF
 from repro.telemetry.trace import jax_profile, tracer_for
@@ -159,10 +160,26 @@ class Simulator:
             out.append(self.run(p, jax.random.fold_in(key, i)))
         return out
 
+    def _attach_faults(self, traces, batch: int):
+        """Merge window-0 fault columns into episodic traces (no-op when
+        `ExecSpec.faults` is absent/inactive, keeping the compiled program
+        and results bitwise-identical to a fault-free run)."""
+        fspec = self.exec_spec.faults
+        if not faults_active(fspec):
+            return traces, None
+        timeline = FaultTimeline(fspec, self.ecfg.num_servers, batch)
+        fa = timeline.window_arrays(0, np.zeros(batch, np.float64),
+                                    fault_horizon(self.ecfg.time_limit,
+                                                  fspec))
+        out = dict(traces)
+        out.update(fa)
+        return out, timeline
+
     def _run_episodic(self, rp: REG.ResolvedPolicy, key) -> SimResult:
         wl = self.workload
         k_trace, k_run = jax.random.split(key)
         traces = jax.vmap(self.trace_fn())(jax.random.split(k_trace, wl.batch))
+        traces, timeline = self._attach_faults(traces, wl.batch)
         keys = jax.random.split(k_run, wl.batch)
         with self.tracer.span("episodic_rollout", cat="rollout",
                               policy=rp.name, batch=wl.batch):
@@ -176,6 +193,8 @@ class Simulator:
             summary.update(self._rollout.serving_stats())
         MET.publish_summary(summary, prefix="eat_episodic",
                             labels=self._labels(rp))
+        if timeline is not None:
+            self._publish_faults(timeline.counters(), rp)
         return SimResult(policy=rp.name, trained=rp.trained, kind=rp.kind,
                          mode="episodic", backend=self.exec_spec.backend,
                          scenario=self.scenario.name, summary=summary,
@@ -190,7 +209,8 @@ class Simulator:
         scfg = StreamConfig(num_windows=wl.num_windows, num_streams=wl.batch,
                             max_steps_per_window=wl.max_steps_per_window,
                             max_carry=wl.max_carry, resp_sla=wl.resp_sla,
-                            chunk_size=wl.chunk_size)
+                            chunk_size=wl.chunk_size,
+                            faults=self.exec_spec.faults)
         res = run_stream(self.ecfg, rp.policy, rp.params, source, k_run,
                          scfg, rollout_fn=self._rollout, collect=wl.collect,
                          tracer=self.tracer)
@@ -209,10 +229,23 @@ class Simulator:
                 {k: v for k, v in self._rollout.serving_stats().items()
                  if k not in ledger},
                 prefix="eat_serving", labels=labels)
+        fault_ledger = dict(getattr(res, "fault_counters", {}) or {})
+        if self.exec_spec.backend == "serving" and hasattr(
+                self._rollout, "fault_counters"):
+            fault_ledger.update(self._rollout.fault_counters())
+        if fault_ledger:
+            self._publish_faults(fault_ledger, rp)
         return SimResult(policy=rp.name, trained=rp.trained, kind=rp.kind,
                          mode="streaming", backend=self.exec_spec.backend,
                          scenario=self.scenario.name, summary=summary,
                          per_window=res.per_window, raw=res)
+
+    def _publish_faults(self, ledger: Dict[str, int],
+                        rp: REG.ResolvedPolicy) -> None:
+        """Fault-injection ledger -> ``eat_fault_*`` counters in the unified
+        registry (see docs/telemetry_schema.md)."""
+        MET.publish_counters({k: int(v) for k, v in ledger.items()},
+                             prefix="eat_fault", labels=self._labels(rp))
 
 
 # ----------------------------------------------------------------------
@@ -227,6 +260,13 @@ def evaluate_batch(ecfg, traces, policy, keys, *, params=None,
     if isinstance(policy, (str, PolicySpec)):
         rp = REG.resolve(policy, ecfg)
         policy, params = rp.policy, rp.params
+    if faults_active(exec_spec.faults):
+        B = int(np.asarray(keys).shape[0])
+        timeline = FaultTimeline(exec_spec.faults, ecfg.num_servers, B)
+        traces = dict(traces)
+        traces.update(timeline.window_arrays(
+            0, np.zeros(B, np.float64),
+            fault_horizon(ecfg.time_limit, exec_spec.faults)))
     res = BK.rollout_fn_for(exec_spec)(
         ecfg, traces, policy, {} if params is None else params, keys,
         num_steps=num_steps)

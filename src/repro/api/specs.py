@@ -23,6 +23,7 @@ from dataclasses import dataclass, field
 from typing import Any, Mapping, Optional
 
 from repro.core.scenarios import Scenario
+from repro.faults import FaultSpec
 from repro.telemetry.trace import TraceConfig
 
 BACKENDS = ("reference", "fused", "sharded", "serving")
@@ -136,6 +137,16 @@ class ExecSpec:
     `serving_execute=False` skips real model execution (pure-mirror mode
     for fast parity checks — pool economics still accrue).
 
+    ``faults`` turns on deterministic fault injection
+    (`repro.faults.FaultSpec`): seeded per-server crash/recovery windows,
+    straggler slowdowns, and cold-restart cache wipes enter the decision
+    step of every backend through extra trace columns, and the serving
+    backend additionally arms its executor-level error/timeout injector
+    with retry + degraded-fallback handling. ``None`` (the default) and
+    ``FaultSpec.none()`` are bitwise-identical to a fault-free run — the
+    fault branch is keyed off the trace columns, so the compiled program
+    is exactly the pre-fault one.
+
     ``trace`` is the observability front door
     (`repro.telemetry.TraceConfig`): with ``enabled=True`` every layer a
     run touches — Simulator, StreamRunner, the streaming trainers, the
@@ -159,6 +170,7 @@ class ExecSpec:
     serving_warmup: Optional[bool] = None  # serving: pre-compile executor
     #                                  programs before timing tasks (None =
     #                                  on iff serving_wall_clock)
+    faults: Optional[FaultSpec] = None  # deterministic fault injection
     trace: TraceConfig = TraceConfig()  # telemetry front door (see above)
 
     def __post_init__(self):

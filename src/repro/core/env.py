@@ -37,7 +37,21 @@ from repro.core import timemodel as TM
 # real-model serving engine, which observes a pool-derived state mirror);
 # re-exported here so every existing `EV.observe_from` consumer — including
 # the bitwise-parity-tested fused/Pallas engines — keeps one import path.
-from repro.core.obs import INF, QueueView, observe_from, visible_queue
+from repro.core.obs import (INF, QueueView, observe_from, server_down,
+                            visible_queue)
+
+#: fault-schedule trace columns (`repro.faults.schedule.FaultTimeline`):
+#: f_down_start/f_down_end (E, F) window-local crash intervals, f_slow (E,)
+#: straggler exec multipliers, f_cold (1,) cold-restart flag. Their PRESENCE
+#: in the trace dict switches the decision step into fault mode — a static
+#: property under jit, so fault-free traces compile the exact program they
+#: always did (bitwise-identical results, zero overhead).
+FAULT_COLS = ("f_down_start", "f_down_end", "f_slow", "f_cold")
+
+
+def has_faults(trace: Dict) -> bool:
+    """Static (trace-structure) test: fault columns attached?"""
+    return "f_down_start" in trace
 
 
 def _pin(x):
@@ -101,6 +115,7 @@ class EnvState(NamedTuple):
     server_gang: jnp.ndarray     # (E,) i32 task-id of last gang, -1 = none
     server_gang_size: jnp.ndarray  # (E,) i32
     task_status: jnp.ndarray     # (K,) i32 0=unscheduled 1=running 2=done
+                                 #          3=failed (fault mode only)
     task_start: jnp.ndarray      # (K,) f32
     task_finish: jnp.ndarray     # (K,) f32
     task_steps: jnp.ndarray      # (K,) i32
@@ -186,10 +201,25 @@ def decision_step(cfg: EnvConfig, trace: Dict, state: EnvState,
     one decision costs exactly one visible-queue top-k.
     """
     t = state.time
+    faulty = has_faults(trace)
     # lazily retire finished tasks
     finished = (state.task_status == 1) & (state.task_finish <= t)
     status = jnp.where(finished, 2, state.task_status)
     state = state._replace(task_status=status)
+
+    if faulty:
+        ds, de = trace["f_down_start"], trace["f_down_end"]       # (E, F)
+        down = jnp.any((ds <= t) & (t < de), axis=1)
+        # cold restart: every server whose crash has begun (past or
+        # ongoing) loses its cached model + gang metadata. Idempotent per
+        # decision, so recovery order does not matter; a down server is
+        # invisible anyway (masked below), an already-recovered one pays
+        # the full reload on its next assignment.
+        wipe = jnp.any(ds <= t, axis=1) & (trace["f_cold"][0] > 0)
+        state = state._replace(
+            server_model=jnp.where(wipe, -1, state.server_model),
+            server_gang=jnp.where(wipe, -1, state.server_gang),
+            server_gang_size=jnp.where(wipe, 0, state.server_gang_size))
 
     idx, valid, queued = q.idx, q.valid, q.queued
     scores = jnp.where(valid, action[2:], -INF)
@@ -202,6 +232,8 @@ def decision_step(cfg: EnvConfig, trace: Dict, state: EnvState,
     m_k = trace["model"][k]
     scale = cfg.scales()[m_k]
     idle = state.server_free_at <= t
+    if faulty:                       # a down server cannot join a gang
+        idle = idle & ~down
     n_idle = jnp.sum(idle.astype(jnp.int32))
     feasible = want_exec & k_valid & (n_idle >= c_k)
 
@@ -209,16 +241,31 @@ def decision_step(cfg: EnvConfig, trace: Dict, state: EnvState,
     steps = jnp.round(cfg.s_min + _pin(jnp.clip(action[1], 0.0, 1.0)
                       * (cfg.s_max - cfg.s_min))).astype(jnp.int32)
     t_exec = _pin(TM.exec_time(c_k, steps, scale))
+    if faulty:                       # gang speed = slowest member's speed
+        slow_k = jnp.max(jnp.where(sel, trace["f_slow"], 1.0))
+        t_exec = _pin(t_exec * slow_k)
     t_init = _pin(jnp.where(reuse, 0.0, TM.init_time(c_k, scale)))
     finish = t + t_exec + t_init
     q_k = Q.quality_of(steps, trace["noise"][k])
     pen = Q.quality_penalty(q_k, cfg.q_min, cfg.p_quality)
     t_resp = finish - trace["arr_time"][k]
 
+    if faulty:
+        # in-flight failure: a selected server crashes before the gang
+        # finishes -> the whole gang aborts at the first member's crash
+        # instant (task status 3, servers freed at the crash, no reward)
+        crash_cand = sel[:, None] & (ds > t) & (ds < finish)      # (E, F)
+        crash_t = jnp.min(jnp.where(crash_cand, ds, INF))
+        will_fail = crash_t < INF
+        sched_status = jnp.where(will_fail, 3, 1)
+        rec_finish = jnp.where(will_fail, crash_t, finish)
+    else:
+        sched_status, rec_finish = 1, finish
+
     # --- apply schedule (masked) -------------------------------------
     f = feasible
     sel_f = sel & f
-    new_free = jnp.where(sel_f, finish, state.server_free_at)
+    new_free = jnp.where(sel_f, rec_finish, state.server_free_at)
     new_model = jnp.where(sel_f, m_k, state.server_model)
     new_gang = jnp.where(sel_f, k.astype(jnp.int32), state.server_gang)
     new_gsize = jnp.where(sel_f, c_k, state.server_gang_size)
@@ -226,9 +273,9 @@ def decision_step(cfg: EnvConfig, trace: Dict, state: EnvState,
     def set_if(arr, val):
         return arr.at[k].set(jnp.where(f, val, arr[k]))
 
-    status = set_if(state.task_status, 1)
+    status = set_if(state.task_status, sched_status)
     start = set_if(state.task_start, t)
-    tfin = set_if(state.task_finish, finish)
+    tfin = set_if(state.task_finish, rec_finish)
     tsteps = set_if(state.task_steps, steps)
     tq = set_if(state.task_quality, q_k)
     trl = set_if(state.task_reload, jnp.where(reuse, 0, 1).astype(jnp.int32))
@@ -241,12 +288,18 @@ def decision_step(cfg: EnvConfig, trace: Dict, state: EnvState,
         + cfg.k_time / (_pin(cfg.beta_t * t_resp) + _pin(cfg.mu_t * t_avg)
                         + 1e-3)
     reward = jnp.where(f, r, 0.0)
+    if faulty:                       # a gang that will crash earns nothing
+        reward = jnp.where(will_fail, 0.0, reward)
 
     # --- advance time on no-op ----------------------------------------
     arr = trace["arr_time"]
     next_arrival = jnp.min(jnp.where(arr > t, arr, INF))
     next_completion = jnp.min(jnp.where(new_free > t, new_free, INF))
     next_event = jnp.minimum(next_arrival, next_completion)
+    if faulty:                       # recoveries are events too, or a fully
+        next_recovery = jnp.min(     # down cluster would stall the clock
+            jnp.where((ds <= t) & (de > t), de, INF))
+        next_event = jnp.minimum(next_event, next_recovery)
     t_new = jnp.where(f, t, jnp.where(next_event < INF, next_event, t + 1.0))
 
     new_state = EnvState(
@@ -256,12 +309,17 @@ def decision_step(cfg: EnvConfig, trace: Dict, state: EnvState,
         task_steps=tsteps, task_quality=tq, task_reload=trl,
         steps_taken=state.steps_taken + 1,
     )
-    all_done = jnp.all((new_state.task_status == 2) |
-                       ((new_state.task_status == 1) & (new_state.task_finish <= t_new)))
+    resolved = (new_state.task_status == 2) | \
+        ((new_state.task_status == 1) & (new_state.task_finish <= t_new))
+    if faulty:                       # failed tasks are resolved (host retries)
+        resolved = resolved | (new_state.task_status == 3)
+    all_done = jnp.all(resolved)
     done = all_done | (t_new >= cfg.time_limit) | (new_state.steps_taken >= cfg.max_steps)
     info = {"scheduled": f, "task": k, "reuse": reuse & f, "steps": steps,
             "quality": jnp.where(f, q_k, 0.0),
             "response": jnp.where(f, t_resp, 0.0)}
+    if faulty:
+        info["failed"] = f & will_fail
     return new_state, reward, done, info
 
 
@@ -298,7 +356,7 @@ def decision_statics(cfg: EnvConfig, trace: Dict) -> Dict[str, jnp.ndarray]:
     re-deriving latency-table lookups every decision). All (K,) arrays."""
     c = trace["c"]
     scale = cfg.scales()[trace["model"]]
-    return {
+    out = {
         "arr_time": trace["arr_time"],
         "c": c,
         "model": trace["model"],
@@ -307,15 +365,26 @@ def decision_statics(cfg: EnvConfig, trace: Dict) -> Dict[str, jnp.ndarray]:
         "init_base": TM.INIT_TIME[TM._log2i(c)],   # model (re)load s
         "scale": scale,
     }
+    if has_faults(trace):            # fault schedules ride along unchanged
+        for col in FAULT_COLS:
+            out[col] = trace[col]
+    return out
 
 
 # ----------------------------------------------------------------------
 def episode_metrics(cfg: EnvConfig, trace: Dict, state: EnvState) -> Dict:
-    """Aggregates matching the paper's Tables IX/X/XI."""
-    sched = state.task_status >= 1
+    """Aggregates matching the paper's Tables IX/X/XI.
+
+    In fault mode, crashed tasks (status 3) are excluded from the quality /
+    response / reload averages — they produced nothing — and reported
+    separately as `num_failed`."""
+    if has_faults(trace):
+        sched = (state.task_status == 1) | (state.task_status == 2)
+    else:
+        sched = state.task_status >= 1
     n = jnp.maximum(jnp.sum(sched.astype(jnp.float32)), 1.0)
     resp = jnp.where(sched, state.task_finish - trace["arr_time"], 0.0)
-    return {
+    out = {
         "num_scheduled": jnp.sum(sched.astype(jnp.int32)),
         "num_done": jnp.sum((state.task_status == 2).astype(jnp.int32)),
         "avg_quality": jnp.sum(jnp.where(sched, state.task_quality, 0.0)) / n,
@@ -323,3 +392,6 @@ def episode_metrics(cfg: EnvConfig, trace: Dict, state: EnvState) -> Dict:
         "reload_rate": jnp.sum(jnp.where(sched, state.task_reload, 0).astype(jnp.float32)) / n,
         "avg_steps": jnp.sum(jnp.where(sched, state.task_steps, 0).astype(jnp.float32)) / n,
     }
+    if has_faults(trace):
+        out["num_failed"] = jnp.sum((state.task_status == 3).astype(jnp.int32))
+    return out

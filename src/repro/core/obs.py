@@ -33,6 +33,15 @@ class QueueView(NamedTuple):
     queued: jnp.ndarray  # (K,) bool arrived & unscheduled
 
 
+def server_down(trace: Dict, t) -> jnp.ndarray:
+    """(E,) bool: server inside one of its trace-scheduled down intervals at
+    time t. Only meaningful when the fault columns are attached
+    (`repro.faults.schedule`); padded slots sit at INF so the interval test
+    is vacuously false for them."""
+    ds, de = trace["f_down_start"], trace["f_down_end"]
+    return jnp.any((ds <= t) & (t < de), axis=-1)
+
+
 def visible_queue(cfg, trace: Dict, state) -> QueueView:
     """Indices of the l earliest queued (arrived & unscheduled) tasks."""
     queued = (state.task_status == 0) & (trace["arr_time"] <= state.time)
@@ -52,7 +61,10 @@ def observe_from(cfg, trace: Dict, state, q: QueueView) -> jnp.ndarray:
     idx, valid = q.idx, q.valid
     inv_ts = 1.0 / cfg.time_scale
     inv_nm = 1.0 / max(cfg.num_models, 1)
-    avail = (state.server_free_at <= t).astype(jnp.float32)
+    up = state.server_free_at <= t
+    if "f_down_start" in trace:      # fault columns attached: a down server
+        up = up & ~server_down(trace, t)   # is unavailable to the policy too
+    avail = up.astype(jnp.float32)
     remaining = jnp.maximum(state.server_free_at - t, 0.0) * inv_ts
     model = (state.server_model.astype(jnp.float32) + 1.0) * inv_nm
     wait = jnp.where(valid, (t - trace["arr_time"][idx]) * inv_ts, 0.0)

@@ -1,0 +1,19 @@
+"""Seeded, deterministic fault injection + the fault-tolerance policy.
+
+Front door: build a `FaultSpec` and hand it to ``ExecSpec(faults=...)`` (the
+Simulator plumbs it through every execution backend) or directly to
+``StreamConfig(faults=...)``. `FaultSpec.none()` — or leaving it None — is
+bitwise-identical to a fault-free run: no arrays are attached, so the
+compiled programs are unchanged.
+"""
+from repro.faults.inject import (ExecFaultInjector, ExecutorFault,
+                                 ExecutorTimeout, InjectedExecutorError)
+from repro.faults.schedule import (FAULT_COLS, RETRY_COL, FaultTimeline,
+                                   fault_horizon, retry_backoff)
+from repro.faults.spec import FaultSpec, faults_active
+
+__all__ = [
+    "FaultSpec", "faults_active", "FaultTimeline", "fault_horizon",
+    "retry_backoff", "FAULT_COLS", "RETRY_COL", "ExecFaultInjector",
+    "ExecutorFault", "ExecutorTimeout", "InjectedExecutorError",
+]

@@ -42,17 +42,21 @@ def _iota(shape, axis):
     return jax.lax.broadcasted_iota(_I32, shape, axis)
 
 
-def _env_step_kernel(cfg: EV.EnvConfig,
-                     time_ref, free_ref, smodel_ref, sgang_ref, sgsize_ref,
-                     tstatus_ref, tstart_ref, tfinish_ref, tsteps_ref,
-                     tqual_ref, treload_ref, staken_ref,
-                     arr_ref, c_ref, model_ref, noise_ref,
-                     stepb_ref, initb_ref, scalem_ref,
-                     action_ref, qidx_ref, qvalid_ref, qqueued_ref,
-                     o_time, o_free, o_smodel, o_sgang, o_sgsize,
-                     o_tstatus, o_tstart, o_tfinish, o_tsteps,
-                     o_tqual, o_treload, o_staken,
-                     o_qidx, o_qvalid, o_qqueued, o_obs, o_reward, o_done):
+def _env_step_kernel(cfg: EV.EnvConfig, faults: bool, *refs):
+    (time_ref, free_ref, smodel_ref, sgang_ref, sgsize_ref,
+     tstatus_ref, tstart_ref, tfinish_ref, tsteps_ref,
+     tqual_ref, treload_ref, staken_ref,
+     arr_ref, c_ref, model_ref, noise_ref,
+     stepb_ref, initb_ref, scalem_ref,
+     action_ref, qidx_ref, qvalid_ref, qqueued_ref) = refs[:23]
+    n_in = 23
+    if faults:                      # four extra fault-schedule inputs
+        fds_ref, fde_ref, fslow_ref, fcold_ref = refs[23:27]
+        n_in = 27
+    (o_time, o_free, o_smodel, o_sgang, o_sgsize,
+     o_tstatus, o_tstart, o_tfinish, o_tsteps,
+     o_tqual, o_treload, o_staken,
+     o_qidx, o_qvalid, o_qqueued, o_obs, o_reward, o_done) = refs[n_in:]
     E, K, l = cfg.num_servers, cfg.max_tasks, cfg.queue_window
     t = time_ref[...]                       # (bb, 1)
     free = free_ref[...]                    # (bb, E)
@@ -86,6 +90,20 @@ def _env_step_kernel(cfg: EV.EnvConfig,
     finished = (tstatus == 1) & (tfinish <= t)
     status = jnp.where(finished, 2, tstatus)
 
+    if faults:
+        # same fault semantics (and expressions) as env.decision_step /
+        # ref.env_step_ref: down mask + cold-restart cache wipe
+        ds = fds_ref[...]               # (bb, E, F)
+        de = fde_ref[...]               # (bb, E, F)
+        fslow = fslow_ref[...]          # (bb, E)
+        fcold = fcold_ref[...]          # (bb, 1)
+        t3 = t[:, :, None]              # (bb, 1, 1)
+        down = jnp.any((ds <= t3) & (t3 < de), axis=2)            # (bb, E)
+        wipe = jnp.any(ds <= t3, axis=2) & (fcold > 0)
+        smodel = jnp.where(wipe, -1, smodel)
+        sgang = jnp.where(wipe, -1, sgang)
+        sgsize = jnp.where(wipe, 0, sgsize)
+
     # visible-queue slot pick (first-match argmax over preference scores)
     scores = jnp.where(qvalid, action[:, 2:], -1e30)
     smax = jnp.max(scores, axis=1, keepdims=True)
@@ -105,6 +123,8 @@ def _env_step_kernel(cfg: EV.EnvConfig,
     m_k = pick(model, 0)
     scale_k = pick(scale, 0.0)
     idle = free <= t
+    if faults:                          # a down server cannot join a gang
+        idle = idle & ~down
     n_idle = jnp.sum(idle.astype(_I32), axis=1, keepdims=True)
     feasible = want_exec & k_valid & (n_idle >= c_k)
 
@@ -141,24 +161,40 @@ def _env_step_kernel(cfg: EV.EnvConfig,
                       * (cfg.s_max - cfg.s_min))).astype(_I32)
     steps_f = steps.astype(_F32)
     t_exec = _pin(pick(step_base, 0.0) * steps_f * scale_k)
+    if faults:                          # gang speed = slowest member's speed
+        slow_k = jnp.max(jnp.where(sel, fslow, 1.0), axis=1, keepdims=True)
+        t_exec = _pin(t_exec * slow_k)
     t_init = _pin(jnp.where(reuse, 0.0, pick(init_base, 0.0) * scale_k))
     finish = t + t_exec + t_init
     q_k = Q.quality_of(steps, pick(noise, 0.0))
     pen = Q.quality_penalty(q_k, cfg.q_min, cfg.p_quality)
     t_resp = finish - pick(arr, 0.0)
 
+    if faults:
+        # in-flight failure: a selected server crashes before the gang
+        # finishes (status 3, servers freed at the crash, no reward)
+        fin3 = finish[:, :, None]       # (bb, 1, 1)
+        crash_cand = sel[:, :, None] & (ds > t3) & (ds < fin3)    # (bb, E, F)
+        crash_t = jnp.min(jnp.min(jnp.where(crash_cand, ds, 1e30), axis=2),
+                          axis=1, keepdims=True)
+        will_fail = crash_t < 1e30
+        sched_status = jnp.where(will_fail, 3, 1)
+        rec_finish = jnp.where(will_fail, crash_t, finish)
+    else:
+        sched_status, rec_finish = 1, finish
+
     # --- apply schedule (masked) ------------------------------------------
     f = feasible
     sel_f = sel & f
-    new_free = jnp.where(sel_f, finish, free)
+    new_free = jnp.where(sel_f, rec_finish, free)
     new_model = jnp.where(sel_f, m_k, smodel)
     new_gang = jnp.where(sel_f, k, sgang)
     new_gsize = jnp.where(sel_f, c_k, sgsize)
 
     hit = hotk & f
-    status2 = jnp.where(hit, 1, status)
+    status2 = jnp.where(hit, sched_status, status)
     start2 = jnp.where(hit, t, tstart)
-    tfin2 = jnp.where(hit, finish, tfinish)
+    tfin2 = jnp.where(hit, rec_finish, tfinish)
     tsteps2 = jnp.where(hit, steps, tsteps)
     tq2 = jnp.where(hit, q_k, tqual)
     trl2 = jnp.where(hit, jnp.where(reuse, 0, 1).astype(_I32), treload)
@@ -173,6 +209,8 @@ def _env_step_kernel(cfg: EV.EnvConfig,
         + cfg.k_time / (_pin(cfg.beta_t * t_resp) + _pin(cfg.mu_t * t_avg)
                         + 1e-3)
     reward = jnp.where(f, r, 0.0)
+    if faults:                          # a gang that will crash earns nothing
+        reward = jnp.where(will_fail, 0.0, reward)
 
     # --- advance time on no-op --------------------------------------------
     next_arrival = jnp.min(jnp.where(arr > t, arr, 1e30), axis=1,
@@ -180,11 +218,18 @@ def _env_step_kernel(cfg: EV.EnvConfig,
     next_completion = jnp.min(jnp.where(new_free > t, new_free, 1e30),
                               axis=1, keepdims=True)
     next_event = jnp.minimum(next_arrival, next_completion)
+    if faults:                          # recoveries are events too
+        next_recovery = jnp.min(
+            jnp.min(jnp.where((ds <= t3) & (de > t3), de, 1e30), axis=2),
+            axis=1, keepdims=True)
+        next_event = jnp.minimum(next_event, next_recovery)
     t_new = jnp.where(f, t, jnp.where(next_event < 1e30, next_event, t + 1.0))
 
     staken2 = staken + 1
-    all_done = jnp.all((status2 == 2) | ((status2 == 1) & (tfin2 <= t_new)),
-                       axis=1, keepdims=True)
+    resolved = (status2 == 2) | ((status2 == 1) & (tfin2 <= t_new))
+    if faults:                          # failed tasks resolve (host retries)
+        resolved = resolved | (status2 == 3)
+    all_done = jnp.all(resolved, axis=1, keepdims=True)
     done = all_done | (t_new >= cfg.time_limit) | (staken2 >= cfg.max_steps)
 
     # --- next visible queue: counting-rank top-k --------------------------
@@ -199,7 +244,11 @@ def _env_step_kernel(cfg: EV.EnvConfig,
     valid2 = iota_l < jnp.sum(queued2.astype(_I32), axis=1, keepdims=True)
 
     # --- Eq.-6 observation of the new state -------------------------------
-    avail = (new_free <= t_new).astype(_F32)
+    up = new_free <= t_new
+    if faults:                          # obs mirrors core.obs: down servers
+        t_new3 = t_new[:, :, None]      # are unavailable to the policy too
+        up = up & ~jnp.any((ds <= t_new3) & (t_new3 < de), axis=2)
+    avail = up.astype(_F32)
     inv_ts = 1.0 / cfg.time_scale
     inv_nm = 1.0 / max(cfg.num_models, 1)
     remaining = jnp.maximum(new_free - t_new, 0.0) * inv_ts
@@ -242,12 +291,18 @@ def env_step_pallas(cfg: EV.EnvConfig, time, free, smodel, sgang, sgsize,
                     tstatus, tstart, tfinish, tsteps, tqual, treload, staken,
                     arr, c, model, noise, step_base, init_base, scale,
                     action, qidx, qvalid, qqueued, *,
+                    fds=None, fde=None, fslow=None, fcold=None,
                     block_b: int = 256, interpret: bool = True):
     """Raw batched kernel entry: (B, ...) arrays in, tuple of 18 arrays out.
 
     Per-env scalars are (B, 1); boolean masks are int32 0/1 on both sides.
+    The optional fault-schedule quartet (`fds`/`fde` (B, E, F) down
+    intervals, `fslow` (B, E) straggler multipliers, `fcold` (B, 1)
+    cold-restart flag — see `repro.faults.schedule`) switches the kernel
+    into fault mode; leaving them None traces the exact fault-free program.
     Use ``ops.env_step_fused`` for the EnvState/QueueView-level wrapper.
     """
+    faults = fds is not None
     B = time.shape[0]
     E, K, l = cfg.num_servers, cfg.max_tasks, cfg.queue_window
     A = cfg.action_dim
@@ -256,6 +311,9 @@ def env_step_pallas(cfg: EV.EnvConfig, time, free, smodel, sgang, sgsize,
     ins = [time, free, smodel, sgang, sgsize, tstatus, tstart, tfinish,
            tsteps, tqual, treload, staken, arr, c, model, noise,
            step_base, init_base, scale, action, qidx, qvalid, qqueued]
+    if faults:
+        F = fds.shape[2]
+        ins += [fds, fde, fslow, fcold]
     if pad:
         ins = [jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)) for x in ins]
     nb = (B + pad) // bb
@@ -269,6 +327,8 @@ def env_step_pallas(cfg: EV.EnvConfig, time, free, smodel, sgang, sgsize,
                 spec(K), spec(K), spec(K), spec(K), spec(K), spec(K),
                 spec(K),                                            # statics
                 spec(A), spec(l), spec(l), spec(K)]                 # act + q
+    if faults:
+        in_specs += [spec(E, F), spec(E, F), spec(E), spec(1)]      # faults
     out_specs = [spec(1), spec(E), spec(E), spec(E), spec(E),
                  spec(K), spec(K), spec(K), spec(K), spec(K), spec(K),
                  spec(1),
@@ -286,7 +346,7 @@ def env_step_pallas(cfg: EV.EnvConfig, time, free, smodel, sgang, sgsize,
                  shp(_F32, 3, E + l), shp(_F32, 1), shp(_I32, 1)]
 
     outs = pl.pallas_call(
-        functools.partial(_env_step_kernel, cfg),
+        functools.partial(_env_step_kernel, cfg, faults),
         grid=(nb,),
         in_specs=in_specs,
         out_specs=out_specs,

@@ -52,6 +52,11 @@ def env_step_fused(ecfg: EV.EnvConfig, statics, state: EV.EnvState,
     if interpret is None:
         interpret = jax.default_backend() not in ("gpu", "tpu")
     as_i32 = lambda b: b.astype(jnp.int32)
+    fault_kw = {}
+    if EV.has_faults(statics):      # fault schedules ride as extra inputs
+        fault_kw = dict(fds=statics["f_down_start"],
+                        fde=statics["f_down_end"],
+                        fslow=statics["f_slow"], fcold=statics["f_cold"])
     outs = env_step_pallas(
         ecfg,
         state.time[:, None], state.server_free_at, state.server_model,
@@ -63,7 +68,7 @@ def env_step_fused(ecfg: EV.EnvConfig, statics, state: EV.EnvState,
         statics["noise"], statics["step_base"], statics["init_base"],
         statics["scale"],
         action, queue.idx, as_i32(queue.valid), as_i32(queue.queued),
-        block_b=block_b, interpret=bool(interpret))
+        **fault_kw, block_b=block_b, interpret=bool(interpret))
     (time, free, smodel, sgang, sgsize, tstatus, tstart, tfinish, tsteps,
      tqual, treload, staken, qidx, qvalid, qqueued, obs, reward, done) = outs
     new_state = EV.EnvState(

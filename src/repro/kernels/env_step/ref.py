@@ -40,10 +40,22 @@ def env_step_ref(cfg: EV.EnvConfig, statics: Dict, state: EV.EnvState,
     E, K, l = cfg.num_servers, cfg.max_tasks, cfg.queue_window
     arr = statics["arr_time"]
     t = state.time
+    faulty = EV.has_faults(statics)
 
     # lazily retire finished tasks
     finished = (state.task_status == 1) & (state.task_finish <= t)
     status = jnp.where(finished, 2, state.task_status)
+
+    if faulty:
+        # same fault semantics (and the same expressions, for bitwise
+        # parity) as env.decision_step: down mask, cold-restart cache wipe
+        ds, de = statics["f_down_start"], statics["f_down_end"]   # (E, F)
+        down = jnp.any((ds <= t) & (t < de), axis=1)
+        wipe = jnp.any(ds <= t, axis=1) & (statics["f_cold"][0] > 0)
+        state = state._replace(
+            server_model=jnp.where(wipe, -1, state.server_model),
+            server_gang=jnp.where(wipe, -1, state.server_gang),
+            server_gang_size=jnp.where(wipe, 0, state.server_gang_size))
 
     idx, valid, queued = q.idx, q.valid, q.queued
     scores = jnp.where(valid, action[2:], -INF)
@@ -56,6 +68,8 @@ def env_step_ref(cfg: EV.EnvConfig, statics: Dict, state: EV.EnvState,
     m_k = statics["model"][k]
     scale_k = statics["scale"][k]
     idle = state.server_free_at <= t
+    if faulty:                       # a down server cannot join a gang
+        idle = idle & ~down
     n_idle = jnp.sum(idle.astype(jnp.int32))
     feasible = want_exec & k_valid & (n_idle >= c_k)
 
@@ -90,25 +104,39 @@ def env_step_ref(cfg: EV.EnvConfig, statics: Dict, state: EV.EnvState,
                       * (cfg.s_max - cfg.s_min))).astype(jnp.int32)
     steps_f = steps.astype(jnp.float32)
     t_exec = _pin(statics["step_base"][k] * steps_f * scale_k)
+    if faulty:                       # gang speed = slowest member's speed
+        slow_k = jnp.max(jnp.where(sel, statics["f_slow"], 1.0))
+        t_exec = _pin(t_exec * slow_k)
     t_init = _pin(jnp.where(reuse, 0.0, statics["init_base"][k] * scale_k))
     finish = t + t_exec + t_init
     q_k = Q.quality_of(steps, statics["noise"][k])
     pen = Q.quality_penalty(q_k, cfg.q_min, cfg.p_quality)
     t_resp = finish - arr[k]
 
+    if faulty:
+        # in-flight failure: a selected server crashes before the gang
+        # finishes (status 3, servers freed at the crash, no reward)
+        crash_cand = sel[:, None] & (ds > t) & (ds < finish)      # (E, F)
+        crash_t = jnp.min(jnp.where(crash_cand, ds, INF))
+        will_fail = crash_t < INF
+        sched_status = jnp.where(will_fail, 3, 1)
+        rec_finish = jnp.where(will_fail, crash_t, finish)
+    else:
+        sched_status, rec_finish = 1, finish
+
     # --- apply schedule (masked; one-hot instead of scatter) --------------
     f = feasible
     sel_f = sel & f
-    new_free = jnp.where(sel_f, finish, state.server_free_at)
+    new_free = jnp.where(sel_f, rec_finish, state.server_free_at)
     new_model = jnp.where(sel_f, m_k, state.server_model)
     new_gang = jnp.where(sel_f, k.astype(jnp.int32), state.server_gang)
     new_gsize = jnp.where(sel_f, c_k, state.server_gang_size)
 
     iota = jnp.arange(K)
     hit = (iota == k) & f
-    status2 = jnp.where(hit, 1, status)
+    status2 = jnp.where(hit, sched_status, status)
     start2 = jnp.where(hit, t, state.task_start)
-    tfin2 = jnp.where(hit, finish, state.task_finish)
+    tfin2 = jnp.where(hit, rec_finish, state.task_finish)
     tsteps2 = jnp.where(hit, steps, state.task_steps)
     tq2 = jnp.where(hit, q_k, state.task_quality)
     trl2 = jnp.where(hit, jnp.where(reuse, 0, 1).astype(jnp.int32),
@@ -122,11 +150,17 @@ def env_step_ref(cfg: EV.EnvConfig, statics: Dict, state: EV.EnvState,
         + cfg.k_time / (_pin(cfg.beta_t * t_resp) + _pin(cfg.mu_t * t_avg)
                         + 1e-3)
     reward = jnp.where(f, r, 0.0)
+    if faulty:                       # a gang that will crash earns nothing
+        reward = jnp.where(will_fail, 0.0, reward)
 
     # --- advance time on no-op --------------------------------------------
     next_arrival = jnp.min(jnp.where(arr > t, arr, INF))
     next_completion = jnp.min(jnp.where(new_free > t, new_free, INF))
     next_event = jnp.minimum(next_arrival, next_completion)
+    if faulty:                       # recoveries are events too, or a fully
+        next_recovery = jnp.min(     # down cluster would stall the clock
+            jnp.where((ds <= t) & (de > t), de, INF))
+        next_event = jnp.minimum(next_event, next_recovery)
     t_new = jnp.where(f, t, jnp.where(next_event < INF, next_event, t + 1.0))
 
     steps_taken = state.steps_taken + 1
@@ -137,7 +171,10 @@ def env_step_ref(cfg: EV.EnvConfig, statics: Dict, state: EV.EnvState,
         task_steps=tsteps2, task_quality=tq2, task_reload=trl2,
         steps_taken=steps_taken,
     )
-    all_done = jnp.all((status2 == 2) | ((status2 == 1) & (tfin2 <= t_new)))
+    resolved = (status2 == 2) | ((status2 == 1) & (tfin2 <= t_new))
+    if faulty:                       # failed tasks are resolved (host retries)
+        resolved = resolved | (status2 == 3)
+    all_done = jnp.all(resolved)
     done = all_done | (t_new >= cfg.time_limit) | (steps_taken >= cfg.max_steps)
 
     # --- next visible queue + Eq.-6 observation ---------------------------

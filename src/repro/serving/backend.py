@@ -51,6 +51,7 @@ from repro.core import env as EV
 from repro.core import obs as OBS
 from repro.core import quality as Q
 from repro.core.rollout import RolloutResult, Transitions
+from repro.faults import ExecFaultInjector, ExecutorFault, FaultSpec
 from repro.serving.executor import ModelExecutor
 from repro.serving.pool import ServerPool
 from repro.telemetry.profile import DecisionProfile
@@ -137,7 +138,8 @@ class ServingRollout:
     def __init__(self, num_servers: int, *, archs=(), reduced: bool = True,
                  wall_clock: bool = False, execute: bool = True,
                  prompt_len: int = 8, max_new_tokens: int = 16,
-                 seed: int = 0, warmup: Optional[bool] = None, tracer=None):
+                 seed: int = 0, warmup: Optional[bool] = None, tracer=None,
+                 faults: Optional[FaultSpec] = None):
         self.archs = tuple(archs) if archs else ASSIGNED_ARCHS
         self.reduced = reduced
         self.wall_clock = wall_clock
@@ -153,6 +155,9 @@ class ServingRollout:
         self.pool = ServerPool(num_servers)
         self.executor = ModelExecutor(reduced=reduced, tracer=self.tracer)
         self.profile = DecisionProfile()
+        self.faults = faults if (faults is not None and faults.active) \
+            else None
+        self.injector = ExecFaultInjector(self.faults)
         self.tasks_executed = 0
         self.measured_busy: list = []       # wall seconds per executed task
         self._load_key = jax.random.PRNGKey(seed)
@@ -164,6 +169,7 @@ class ServingRollout:
         executor programs (and the warmed-shape memo) survive — compilation
         caches are process-level, not cluster state."""
         self.pool.reset()
+        self.injector.reset()
         self.profile = DecisionProfile()
         self.tasks_executed = 0
         self.measured_busy = []
@@ -182,6 +188,13 @@ class ServingRollout:
         """The pool's monotonic load/reuse/shed ledger alone (metrics
         registry counters; `serving_stats` adds derived scalars)."""
         return dict(self.pool.counters())
+
+    def fault_counters(self) -> Dict[str, int]:
+        """Fault-tolerance ledger: pool retry/degrade counts + injected
+        errors (all zero in a fault-free run)."""
+        out = dict(self.pool.fault_counters())
+        out.update(self.injector.counters())
+        return out
 
     # ------------------------------------------------------------------
     def _arch_of(self, m_k: int) -> str:
@@ -221,10 +234,57 @@ class ServingRollout:
             prompt = self._prompt_rng.integers(
                 0, self.executor.model(arch).cfg.vocab_size,
                 self.prompt_len, dtype=np.int64).astype(np.int32)
-            self.executor.generate(arch, gang[0].params, prompt, c_k, steps,
-                                   self.max_new_tokens)
+            self._generate_tolerant(arch, gang[0].params, prompt, c_k, steps)
         self.tasks_executed += 1
         return time.perf_counter() - t0
+
+    def _generate_tolerant(self, arch: str, params, prompt, c_k: int,
+                           steps: int) -> None:
+        """Real generation under the fault-tolerance policy: each attempt is
+        wall-clock-bounded (`exec_timeout_s`) and may draw an injected
+        transient error; transient failures retry up to `exec_max_attempts`
+        tries, with the LAST attempt degraded to `degrade_steps_frac` of the
+        requested steps (graceful degradation: a reduced-quality result
+        beats no result). Without an active FaultSpec this is exactly one
+        plain `executor.generate` call."""
+        spec = self.faults
+        if spec is None:
+            self.executor.generate(arch, params, prompt, c_k, steps,
+                                   self.max_new_tokens)
+            return
+        attempts = max(int(spec.exec_max_attempts), 1)
+        for attempt in range(1, attempts + 1):
+            run_steps = steps
+            if attempt == attempts and attempts > 1:
+                run_steps = max(1, int(steps * spec.degrade_steps_frac))
+            degraded = run_steps < steps
+            try:
+                if degraded:
+                    with self.tracer.span("executor_degrade", cat="serving",
+                                          arch=arch, steps=run_steps,
+                                          requested=steps):
+                        self.injector.maybe_fail("generate")
+                        self.executor.generate(
+                            arch, params, prompt, c_k, run_steps,
+                            self.max_new_tokens,
+                            deadline_s=spec.exec_timeout_s)
+                    self.pool.exec_degraded += 1
+                else:
+                    self.injector.maybe_fail("generate")
+                    self.executor.generate(
+                        arch, params, prompt, c_k, run_steps,
+                        self.max_new_tokens, deadline_s=spec.exec_timeout_s)
+                return
+            except ExecutorFault as err:
+                self.pool.exec_failures += 1
+                if attempt == attempts:
+                    self.pool.exec_gave_up += 1
+                    return          # every attempt failed: serve nothing
+                self.pool.exec_retries += 1
+                with self.tracer.span("executor_retry", cat="serving",
+                                      arch=arch, attempt=attempt,
+                                      error=type(err).__name__):
+                    pass
 
     def _load(self, server, arch: str) -> None:
         with self.tracer.span("model_load", cat="serving", arch=arch):
@@ -274,7 +334,12 @@ class ServingRollout:
                     trace, state, q, action)
                 jax.block_until_ready(r)
             self.profile.observe("env_advance", time.perf_counter() - t0)
-            if not done and bool(info["scheduled"]):
+            if (not done and bool(info["scheduled"])
+                    and bool(np.asarray(info.get("failed", False)))):
+                # the mirror says a selected server crashes mid-run: the
+                # gang aborts, so no real execution happens for this task
+                self.pool.crashed_tasks += 1
+            elif not done and bool(info["scheduled"]):
                 k_task = info["task"]
                 sel = np.asarray(nstate.server_gang == k_task)
                 with tr.span("execute_task", cat="serving", step=t_i,
@@ -365,7 +430,8 @@ def _from_spec(spec) -> "ServingRollout":
                     max_new_tokens=spec.serving_max_new_tokens,
                     seed=spec.serving_seed,
                     warmup=getattr(spec, "serving_warmup", None),
-                    tracer=tracer_for(getattr(spec, "trace", None)))
+                    tracer=tracer_for(getattr(spec, "trace", None)),
+                    faults=getattr(spec, "faults", None))
             return self.inner
 
         def __call__(self, ecfg, traces, policy, params, keys, **kw):
@@ -381,5 +447,8 @@ def _from_spec(spec) -> "ServingRollout":
 
         def pool_counters(self):
             return self.inner.pool_counters() if self.inner else {}
+
+        def fault_counters(self):
+            return self.inner.fault_counters() if self.inner else {}
 
     return _Lazy()

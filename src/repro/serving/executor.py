@@ -26,6 +26,7 @@ accounts the parallel speedup either way.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Dict, Optional
 
 import jax
@@ -33,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import get_config
+from repro.faults.inject import ExecutorTimeout
 from repro.models.lm import period_spec
 from repro.models.zoo import Model, build_model
 from repro.telemetry.trace import NULL_TRACER
@@ -162,11 +164,17 @@ class ModelExecutor:
 
     def generate(self, arch: str, params, prompt, c: int, steps: int,
                  max_new_tokens: int = 16, *,
-                 force_chunked: Optional[bool] = None) -> np.ndarray:
+                 force_chunked: Optional[bool] = None,
+                 deadline_s: float = 0.0) -> np.ndarray:
         """Greedy generation of `steps` tokens on a c-patch gang's params.
 
         `force_chunked` overrides the c>1 chunking heuristic (tests assert
-        the c=1 chunked path is bitwise-identical to the unchunked one)."""
+        the c=1 chunked path is bitwise-identical to the unchunked one).
+        `deadline_s > 0` bounds the attempt's wall clock: the decode loop
+        checks the budget once per iteration and raises
+        `faults.ExecutorTimeout` when exceeded (the retry/degrade wrapper
+        in `serving.backend` catches it); 0 disables the check."""
+        t_start = time.perf_counter()
         model = self.model(arch)
         cfg = model.cfg
         prompt = np.asarray(prompt, np.int32)
@@ -203,7 +211,12 @@ class ModelExecutor:
                          axis=-1).astype(jnp.int32)
         with tr.span("decode", cat="serving", arch=arch, steps=steps,
                      capacity=capacity):
-            for _ in range(steps):
+            for i in range(steps):
+                if deadline_s > 0.0 \
+                        and time.perf_counter() - t_start > deadline_s:
+                    raise ExecutorTimeout(
+                        f"{arch} generate exceeded {deadline_s:.1f}s "
+                        f"budget at decode step {i}/{steps}")
                 out.append(int(tok[0, 0]))
                 logits, cache = self._decode[arch](params, cache, tok)
                 tok = jnp.argmax(logits[:, -1:, : cfg.vocab_size],

@@ -37,6 +37,13 @@ class ServerPool:
         self.servers = [LogicalServer(i) for i in range(num_servers)]
         self.load_count = 0
         self.reuse_count = 0
+        # fault-tolerance ledger (serving.backend's retry/degrade wrapper):
+        # kept OUT of `counters()`, whose key set is pinned by tests
+        self.exec_failures = 0        # transient errors + timeouts observed
+        self.exec_retries = 0         # re-attempts after a transient failure
+        self.exec_degraded = 0        # reduced-steps fallback completions
+        self.exec_gave_up = 0         # tasks abandoned after the last attempt
+        self.crashed_tasks = 0        # gangs skipped: server down at dispatch
 
     def idle(self, now: float) -> List[LogicalServer]:
         return [s for s in self.servers if s.busy_until <= now]
@@ -80,6 +87,14 @@ class ServerPool:
         return {"model_loads": self.load_count,
                 "model_reuses": self.reuse_count}
 
+    def fault_counters(self) -> Dict[str, int]:
+        """The fault-tolerance ledger (all zero in a fault-free run)."""
+        return {"exec_failures": self.exec_failures,
+                "exec_retries": self.exec_retries,
+                "exec_degraded": self.exec_degraded,
+                "exec_gave_up": self.exec_gave_up,
+                "crashed_tasks": self.crashed_tasks}
+
     def reset(self) -> None:
         """Drop every loaded model and the load/reuse ledger (fresh cluster)."""
         for s in self.servers:
@@ -87,3 +102,8 @@ class ServerPool:
             s.gang, s.gang_size, s.busy_until = -1, 0, 0.0
         self.load_count = 0
         self.reuse_count = 0
+        self.exec_failures = 0
+        self.exec_retries = 0
+        self.exec_degraded = 0
+        self.exec_gave_up = 0
+        self.crashed_tasks = 0

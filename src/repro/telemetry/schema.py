@@ -24,6 +24,7 @@ KNOWN_SPANS: Dict[str, Tuple[str, str]] = {
     "build_window":     ("stream",   "traffic.StreamRunner"),
     "window_rollout":   ("rollout",  "traffic.StreamRunner"),
     "window_seam":      ("stream",   "traffic.StreamRunner"),
+    "fault_requeue":    ("stream",   "traffic.StreamRunner"),
     # streaming trainers (repro.training.stream_train)
     "train_round":      ("train",    "training.stream_train"),
     "replay_push":      ("train",    "training.stream_train"),
@@ -38,6 +39,9 @@ KNOWN_SPANS: Dict[str, Tuple[str, str]] = {
     "executor_warmup":  ("serving",  "serving.ServingRollout"),
     "prefill":          ("serving",  "serving.ModelExecutor"),
     "decode":           ("serving",  "serving.ModelExecutor"),
+    # serving fault tolerance (repro.serving.backend)
+    "executor_retry":   ("serving",  "serving.ServingRollout"),
+    "executor_degrade": ("serving",  "serving.ServingRollout"),
 }
 
 _EVENT_SCHEMA = {

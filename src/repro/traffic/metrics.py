@@ -33,10 +33,13 @@ def bucketize_counts(values, mask, edges):
 
 # ----------------------------------------------------------------------
 # Keys the engine emits per window as (B,) arrays (summed here), plus
-# "hist" as (B, bins) counts and "elapsed" as per-stream window span.
+# "hist" as (B, bins) counts and "elapsed" as per-stream window span. The
+# fault-mode keys (n_failed / n_failed_dropped / n_retried / n_readmitted)
+# are optional — absent records fold in as zero.
 _SUM_KEYS = ("n_injected", "n_sched", "n_done", "n_dropped", "n_reload",
              "n_viol", "n_viol_q", "n_viol_t", "sum_resp", "sum_quality",
-             "sum_steps", "busy_time", "elapsed")
+             "sum_steps", "busy_time", "elapsed",
+             "n_failed", "n_failed_dropped", "n_retried", "n_readmitted")
 
 
 class StreamAggregator:
@@ -60,7 +63,8 @@ class StreamAggregator:
 
     def update(self, stats: Dict[str, np.ndarray]) -> None:
         for k in _SUM_KEYS:
-            self.totals[k] += float(np.sum(stats[k]))
+            if k in stats:
+                self.totals[k] += float(np.sum(stats[k]))
         self.hist.add_counts(np.sum(np.asarray(stats["hist"]), axis=0))
         self.max_resp = max(self.max_resp, float(np.max(stats["max_resp"])))
         self.num_windows += 1
@@ -71,12 +75,16 @@ class StreamAggregator:
         sched = max(t["n_sched"], 1.0)
         secs = max(t["elapsed"], 1e-9)       # stream-seconds
         good = t["n_sched"] - t["n_viol"]
-        # a *resolved* task left the system: scheduled, or shed by max_carry
-        # backlog shedding. Drops are QoS failures (the task was offered and
-        # never served), so the headline violation/goodput rates count them —
-        # a policy cannot shed its way to a better QoS score. The *_scheduled
+        # a *resolved* task left the system: scheduled, shed by max_carry
+        # backlog shedding, or dropped after exhausting its fault-retry
+        # budget. Drops are QoS failures (the task was offered and never
+        # served), so the headline violation/goodput rates count them — a
+        # policy cannot shed its way to a better QoS score. The *_scheduled
         # variants keep the drop-exclusive (conditional on service) view.
-        resolved = max(t["n_sched"] + t["n_dropped"], 1.0)
+        # Crash-then-retried tasks are still in flight (not resolved); they
+        # resolve at their eventual success, shed, or retry exhaustion.
+        drops = t["n_dropped"] + t["n_failed_dropped"]
+        resolved = max(t["n_sched"] + drops, 1.0)
         # histogram percentiles interpolate inside a log bin, which can
         # overshoot the true maximum — clamp to the exact running max
         def pct(q):
@@ -87,20 +95,23 @@ class StreamAggregator:
             "tasks_injected": int(t["n_injected"]),
             "tasks_scheduled": int(t["n_sched"]),
             "tasks_completed_in_window": int(t["n_done"]),
-            "tasks_dropped": int(t["n_dropped"]),
-            "tasks_resolved": int(t["n_sched"] + t["n_dropped"]),
+            "tasks_dropped": int(drops),
+            "tasks_dropped_shed": int(t["n_dropped"]),
+            "tasks_dropped_retry_exhausted": int(t["n_failed_dropped"]),
+            "tasks_failed": int(t["n_failed"]),
+            "tasks_retried": int(t["n_retried"]),
+            "tasks_resolved": int(t["n_sched"] + drops),
             "sim_seconds": float(secs),
             "latency_p50": pct(0.50),
             "latency_p95": pct(0.95),
             "latency_p99": pct(0.99),
             "latency_mean": float(t["sum_resp"] / sched),
             "latency_max": float(self.max_resp),
-            "drop_rate": float(t["n_dropped"] / resolved),
-            "qos_violation_rate": float((t["n_viol"] + t["n_dropped"])
-                                        / resolved),
+            "drop_rate": float(drops / resolved),
+            "qos_violation_rate": float((t["n_viol"] + drops) / resolved),
             "qos_violation_rate_quality": float(t["n_viol_q"] / resolved),
-            "qos_violation_rate_latency": float((t["n_viol_t"]
-                                                 + t["n_dropped"]) / resolved),
+            "qos_violation_rate_latency": float((t["n_viol_t"] + drops)
+                                                / resolved),
             "qos_violation_rate_scheduled": float(t["n_viol"] / sched),
             "avg_quality": float(t["sum_quality"] / sched),
             "avg_steps": float(t["sum_steps"] / sched),

@@ -33,6 +33,8 @@ from repro.core import env as EV
 from repro.core import rollout as RO
 from repro.core.rollout import Transitions
 from repro.core.workload import TraceConfig, sample_task_attrs
+from repro.faults import (RETRY_COL, FaultSpec, FaultTimeline, fault_horizon,
+                          faults_active, retry_backoff)
 from repro.telemetry.trace import NULL_TRACER
 from repro.traffic import metrics as MX
 
@@ -51,6 +53,9 @@ class StreamConfig:
     chunk_size: int = 0                     # arrival buffer refill; 0 = 4K
     fused: bool = True                      # fused env-step engine (bitwise
     #                                         identical; False = legacy path)
+    faults: Optional[FaultSpec] = None      # deterministic fault injection;
+    #                                         None / FaultSpec.none() =
+    #                                         bitwise-identical fault-free run
 
 
 # ----------------------------------------------------------------------
@@ -168,12 +173,25 @@ class TraceTaskSource:
 def _window_seam(ecfg: EV.EnvConfig, traces: Dict, state: EV.EnvState,
                  edges: jnp.ndarray, resp_sla: jnp.ndarray):
     """Device-side seam: per-window QoS stats + next-window carry state +
-    compacted leftovers, vmapped over the stream axis."""
+    compacted leftovers, vmapped over the stream axis.
+
+    With fault columns attached the seam additionally excludes crashed
+    tasks (status 3) from the served stats, compacts them into a separate
+    retry set (with their `f_retries` counts, clock rebased like the
+    leftovers), and cold-wipes the model cache of carried servers whose
+    crash fell inside this window — the next window's fault arrays drop
+    fully-past intervals, so the wipe must happen here. Mode is a static
+    property of the trace structure: fault-free traces compile the exact
+    program they always did."""
     K, E = ecfg.max_tasks, ecfg.num_servers
+    faulty = "f_down_start" in traces
 
     def one(trace, st):
         te = st.time
-        sched = st.task_status >= 1
+        if faulty:                   # crashed tasks (status 3) served nothing
+            sched = (st.task_status == 1) | (st.task_status == 2)
+        else:
+            sched = st.task_status >= 1
         fsch = sched.astype(jnp.float32)
         resp = jnp.where(sched, st.task_finish - trace["arr_time"], 0.0)
         viol_q = sched & (st.task_quality < ecfg.q_min)
@@ -196,6 +214,9 @@ def _window_seam(ecfg: EV.EnvConfig, traces: Dict, state: EV.EnvState,
             "elapsed": te,
             "hist": MX.bucketize_counts(resp, sched, edges),
         }
+        if faulty:
+            stats["n_failed"] = jnp.sum(
+                (st.task_status == 3).astype(jnp.int32))
 
         # ---- carry: rebase the clock, keep server occupancy + gang ids --
         gang = st.server_gang
@@ -217,6 +238,14 @@ def _window_seam(ecfg: EV.EnvConfig, traces: Dict, state: EV.EnvState,
             task_reload=jnp.zeros((K,), jnp.int32),
             steps_taken=jnp.zeros((), jnp.int32),
         )
+        if faulty:                   # carried servers lose their cache if
+            wipe = jnp.any(trace["f_down_start"] <= te, axis=1) \
+                & (trace["f_cold"][0] > 0)   # their crash began this window
+            carry = carry._replace(
+                server_model=jnp.where(wipe, -1, carry.server_model),
+                server_gang=jnp.where(wipe, -1, carry.server_gang),
+                server_gang_size=jnp.where(wipe, 0,
+                                           carry.server_gang_size))
 
         # ---- leftovers: unscheduled tasks, oldest first, clock rebased --
         left = st.task_status == 0
@@ -224,6 +253,17 @@ def _window_seam(ecfg: EV.EnvConfig, traces: Dict, state: EV.EnvState,
         order = jnp.argsort(jnp.where(left, trace["arr_time"], EV.INF))
         leftovers = {c: trace[c][order] for c in _COLS}
         leftovers["arr_time"] = leftovers["arr_time"] - te
+        if faulty:
+            leftovers[RETRY_COL] = trace[RETRY_COL][order]
+            # ---- failed tasks: compacted for the host retry machinery --
+            failed = st.task_status == 3
+            n_fail = jnp.sum(failed.astype(jnp.int32))
+            forder = jnp.argsort(jnp.where(failed, trace["arr_time"],
+                                           EV.INF))
+            fail = {c: trace[c][forder] for c in _COLS}
+            fail["arr_time"] = fail["arr_time"] - te
+            fail[RETRY_COL] = trace[RETRY_COL][forder]
+            return stats, carry, leftovers, n_left, fail, n_fail
         return stats, carry, leftovers, n_left
 
     return jax.vmap(one)(traces, state)
@@ -240,6 +280,7 @@ class StreamResult(NamedTuple):
     aggregator: MX.StreamAggregator
     final_carry: EV.EnvState
     transitions: Optional[List[Transitions]] = None   # per window, collect=
+    fault_counters: Dict = {}          # host fault ledger (empty: faults off)
 
 
 class WindowResult(NamedTuple):
@@ -300,18 +341,57 @@ class StreamRunner:
         self.t0 = np.zeros(B, np.float64)   # absolute epoch of window start
         self.window = 0
         self.per_window: List[Dict] = []
+        # ---- fault tolerance: crash timeline + host retry buffers -------
+        self.faults = scfg.faults if faults_active(scfg.faults) else None
+        if self.faults is not None:
+            self.timeline = FaultTimeline(self.faults, ecfg.num_servers, B)
+            self._horizon = fault_horizon(ecfg.time_limit, self.faults)
+            for lo in self.leftovers:
+                lo[RETRY_COL] = np.zeros((0,), np.int32)
+            # per stream: failed tasks waiting out their backoff. arr_abs /
+            # ready_abs are absolute-clock float64 (windows rebase to f32).
+            self._retry = [
+                {"arr_abs": np.zeros((0,), np.float64),
+                 "c": np.zeros((0,), np.int32),
+                 "model": np.zeros((0,), np.int32),
+                 "noise": np.zeros((0,), np.float32),
+                 "retries": np.zeros((0,), np.int32),
+                 "ready_abs": np.zeros((0,), np.float64)}
+                for _ in range(B)]
 
     # ------------------------------------------------------------------
     def _build_window(self):
-        """Fill the next window's traces: shed over-carry backlog, re-inject
-        the surviving leftovers, top up with fresh arrivals."""
+        """Fill the next window's traces: re-admit retry-buffer tasks whose
+        backoff expired (merged into the backlog by original arrival time),
+        shed over-carry backlog, re-inject the surviving leftovers, top up
+        with fresh arrivals."""
         K, B = self.K, self.B
+        faulty = self.faults is not None
         cols = {c: np.zeros((B, K), _DTYPES[c]) for c in _COLS}
+        if faulty:
+            cols[RETRY_COL] = np.zeros((B, K), np.int32)
         n_injected = np.zeros(B, np.int64)
         n_dropped = np.zeros(B, np.int64)
         n_carried = np.zeros(B, np.int64)
+        n_readmit = np.zeros(B, np.int64)
         for b in range(B):
             lo = self.leftovers[b]
+            if faulty:
+                rb = self._retry[b]
+                due = rb["ready_abs"] <= self.t0[b]
+                if due.any():
+                    # keep the ORIGINAL (rebased) arrival time: latency is
+                    # measured from first arrival, not from re-admission
+                    add = {"arr_time": (rb["arr_abs"][due] - self.t0[b]
+                                        ).astype(np.float32),
+                           "c": rb["c"][due], "model": rb["model"][due],
+                           "noise": rb["noise"][due],
+                           RETRY_COL: rb["retries"][due]}
+                    n_readmit[b] = int(due.sum())
+                    lo = {c: np.concatenate([lo[c], add[c]]) for c in lo}
+                    order = np.argsort(lo["arr_time"], kind="stable")
+                    lo = {c: v[order] for c, v in lo.items()}
+                    self._retry[b] = {c: v[~due] for c, v in rb.items()}
             nl = len(lo["arr_time"])
             if nl > self.max_carry:        # shed the stalest backlog
                 n_dropped[b] = nl - self.max_carry
@@ -328,7 +408,9 @@ class StreamRunner:
                                        - self.t0[b]).astype(np.float32)
                 else:
                     cols[c][b, nl:] = new[c]
-        return cols, n_injected, n_dropped, n_carried
+            if faulty:
+                cols[RETRY_COL][b, :nl] = lo[RETRY_COL]
+        return cols, n_injected, n_dropped, n_carried, n_readmit
 
     def run_window(self, *, policy=None, params=None,
                    collect: bool = False) -> WindowResult:
@@ -347,8 +429,14 @@ class StreamRunner:
                                         else "reference"))
         with wspan:
             with tr.span("build_window", cat="stream", window=w):
-                cols, n_injected, n_dropped, n_carried = self._build_window()
+                (cols, n_injected, n_dropped, n_carried,
+                 n_readmit) = self._build_window()
                 traces = {c: jnp.asarray(v) for c, v in cols.items()}
+                if self.faults is not None:
+                    fa = self.timeline.window_arrays(w, self.t0,
+                                                     self._horizon)
+                    traces.update(
+                        {k: jnp.asarray(v) for k, v in fa.items()})
                 keys = jax.random.split(jax.random.fold_in(self.key, w),
                                         self.B)
             with tr.span("window_rollout", cat="rollout", window=w,
@@ -371,14 +459,31 @@ class StreamRunner:
                     # finish inside its span instead of inside the seam's
                     jax.block_until_ready(res.final_state)
             with tr.span("window_seam", cat="stream", window=w):
-                stats, self.carry, lcols, n_left = _window_seam(
-                    self.ecfg, traces, res.final_state, self._edges,
-                    self._sla)
+                seam = _window_seam(self.ecfg, traces, res.final_state,
+                                    self._edges, self._sla)
+                if self.faults is not None:
+                    stats, self.carry, lcols, n_left, fcols, n_fail = seam
+                    lcols_keys = _COLS + (RETRY_COL,)
+                else:
+                    stats, self.carry, lcols, n_left = seam
+                    fcols = n_fail = None
+                    lcols_keys = _COLS
                 n_left = np.asarray(n_left)
                 lcols = {c: np.asarray(v) for c, v in lcols.items()}
-                self.leftovers = [{c: lcols[c][b, :n_left[b]] for c in _COLS}
+                self.leftovers = [{c: lcols[c][b, :n_left[b]]
+                                   for c in lcols_keys}
                                   for b in range(self.B)]
                 self.t0 += np.asarray(stats["elapsed"], np.float64)
+
+        n_retried = np.zeros(self.B, np.int64)
+        n_fail_drop = np.zeros(self.B, np.int64)
+        if self.faults is not None:
+            with tr.span("fault_requeue", cat="stream", window=w):
+                n_retried, n_fail_drop = self._requeue_failed(
+                    {c: np.asarray(v) for c, v in fcols.items()},
+                    np.asarray(n_fail))
+            tr.counter("pending_retry", float(self.pending_retry()),
+                       window=w)
 
         tr.counter("backlog", float(n_left.sum()), window=w)
         rec = {k: np.asarray(v) for k, v in stats.items()}
@@ -386,6 +491,10 @@ class StreamRunner:
         rec["n_dropped"] = n_dropped
         rec["n_carried"] = n_carried
         rec["n_leftover"] = n_left.astype(np.int64)
+        if self.faults is not None:
+            rec["n_retried"] = n_retried
+            rec["n_failed_dropped"] = n_fail_drop
+            rec["n_readmitted"] = n_readmit
         self.agg.update(rec)
         n_sched_w = int(rec["n_sched"].sum())
         record = {
@@ -400,6 +509,11 @@ class StreamRunner:
             "episode_return_mean": float(np.mean(np.asarray(
                 res.metrics["episode_return"]))),
         }
+        if self.faults is not None:
+            record["failed"] = int(rec["n_failed"].sum())
+            record["retried"] = int(n_retried.sum())
+            record["failed_dropped"] = int(n_fail_drop.sum())
+            record["pending_retry"] = self.pending_retry()
         self.per_window.append(record)
         self.window += 1
         return WindowResult(window=w, stats=rec, record=record,
@@ -407,9 +521,67 @@ class StreamRunner:
                             transitions=res.transitions if collect else None)
 
     # ------------------------------------------------------------------
+    def _requeue_failed(self, fcols: Dict[str, np.ndarray],
+                        n_fail: np.ndarray):
+        """Route this window's crashed tasks into the retry buffers.
+
+        Each failure bumps the task's retry count and earns a capped
+        exponential backoff (`faults.retry_backoff`) measured from the new
+        window epoch; tasks beyond `max_retries`, or whose age at the
+        earliest possible re-admission would already exceed
+        `retry_deadline`, are dropped (deadline-aware retry budget — a task
+        that cannot possibly meet QoS is not worth a server)."""
+        spec = self.faults
+        n_retried = np.zeros(self.B, np.int64)
+        n_dropped = np.zeros(self.B, np.int64)
+        for b in range(self.B):
+            m = int(n_fail[b])
+            if m == 0:
+                continue
+            # arr was rebased to the new epoch by the seam (-te), so the
+            # absolute original arrival is rebased + t0 (t0 already moved)
+            arr_abs = fcols["arr_time"][b, :m].astype(np.float64) \
+                + self.t0[b]
+            r = fcols[RETRY_COL][b, :m].astype(np.int64) + 1
+            ready = self.t0[b] + np.array(
+                [retry_backoff(spec, int(ri)) for ri in r], np.float64)
+            keep = (r <= spec.max_retries) \
+                & ((ready - arr_abs) <= spec.retry_deadline)
+            n_retried[b] = int(keep.sum())
+            n_dropped[b] = m - int(keep.sum())
+            if not keep.any():
+                continue
+            rb = self._retry[b]
+            self._retry[b] = {
+                "arr_abs": np.concatenate([rb["arr_abs"], arr_abs[keep]]),
+                "c": np.concatenate([rb["c"], fcols["c"][b, :m][keep]]),
+                "model": np.concatenate([rb["model"],
+                                         fcols["model"][b, :m][keep]]),
+                "noise": np.concatenate([rb["noise"],
+                                         fcols["noise"][b, :m][keep]]),
+                "retries": np.concatenate([rb["retries"],
+                                           r[keep].astype(np.int32)]),
+                "ready_abs": np.concatenate([rb["ready_abs"], ready[keep]]),
+            }
+        return n_retried, n_dropped
+
+    def pending_retry(self) -> int:
+        """Failed tasks currently waiting out their backoff."""
+        if self.faults is None:
+            return 0
+        return int(sum(len(rb["arr_abs"]) for rb in self._retry))
+
     def backlog(self) -> int:
         """Tasks currently waiting across all streams (pre-shedding)."""
         return int(sum(len(l["arr_time"]) for l in self.leftovers))
+
+    def fault_counters(self) -> Dict[str, int]:
+        """Host-side fault bookkeeping (empty when faults are off)."""
+        if self.faults is None:
+            return {}
+        out = dict(self.timeline.counters())
+        out["tasks_pending_retry"] = self.pending_retry()
+        return out
 
     def result(self, transitions: Optional[List[Transitions]] = None
                ) -> StreamResult:
@@ -417,9 +589,11 @@ class StreamRunner:
         summary["tasks_leftover"] = self.backlog()
         summary["num_streams"] = self.B
         summary["window_tasks"] = self.K
+        summary["tasks_failed_pending_retry"] = self.pending_retry()
         return StreamResult(summary=summary, per_window=self.per_window,
                             aggregator=self.agg, final_carry=self.carry,
-                            transitions=transitions)
+                            transitions=transitions,
+                            fault_counters=self.fault_counters())
 
 
 # ----------------------------------------------------------------------

@@ -177,6 +177,35 @@ def test_sharded_collect_transitions_bitwise():
         tf.raw.transitions, ts.raw.transitions)
 
 
+def test_sharded_fault_parity_bitwise():
+    """An active FaultSpec must not break sharded/fused/reference parity:
+    the fault trace columns ride the same P(axis) batch sharding as the
+    rest of the trace, so episodic summaries and per-episode metrics stay
+    bitwise-identical across backends."""
+    from repro.faults import FaultSpec
+    spec = FaultSpec(seed=5, mtbf=60.0, mttr=20.0, straggler_prob=0.2,
+                     straggler_factor=3.0, max_retries=2)
+    wl = api.WorkloadSpec.episodic(CELL, batch=8, num_steps=16)
+    key = jax.random.PRNGKey(21)
+    results = {
+        b: api.Simulator(wl, api.ExecSpec(backend=b, faults=spec)).run(
+            "greedy", key)
+        for b in ("fused", "reference", "sharded")}
+    assert float(np.sum(results["fused"].metrics["num_failed"])) > 0, \
+        "chaos spec injected no failures — fault trace not attached?"
+    base = _summary_arrays(results["fused"].summary)
+    for backend in ("reference", "sharded"):
+        other = _summary_arrays(results[backend].summary)
+        assert base.keys() == other.keys()
+        for k in base:
+            np.testing.assert_array_equal(base[k], other[k],
+                                          err_msg=f"faults/{backend}/{k}")
+        for k, v in results["fused"].metrics.items():
+            np.testing.assert_array_equal(
+                v, results[backend].metrics[k],
+                err_msg=f"faults/{backend}/metrics/{k}")
+
+
 def test_sharded_uses_multi_device_mesh_when_available():
     """Under the CI sharded-parity job (8 forced host devices) the grid
     above must actually exercise a multi-device mesh."""

@@ -1,0 +1,322 @@
+"""Deterministic fault injection: cross-implementation parity, ledger
+conservation, retry/backoff semantics, and serving-layer fault tolerance.
+
+The contract under test (docs/faults.md):
+
+* faults OFF (``faults=None`` or ``FaultSpec.none()``) is *bitwise-identical*
+  to the pre-fault code on every backend — the fault branch keys off the
+  presence of the ``f_*`` trace columns, so a fault-free trace compiles the
+  exact pre-existing program;
+* faults ON produce the *same* results on the legacy compositional step,
+  the jnp reference, and the Pallas kernel (and hence on the
+  reference/fused/sharded backends);
+* the streaming ledger stays conserved under crashes and retries:
+  ``injected == scheduled + dropped + failed_pending_retry + leftover``;
+* the serving executor retries transient faults, degrades the last attempt,
+  and its fault state fully resets between Simulator runs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import env as EV
+from repro.core import rollout as RO
+from repro.core.workload import TraceConfig, make_trace
+from repro.faults import (FAULT_COLS, ExecFaultInjector, FaultSpec,
+                          FaultTimeline, fault_horizon, faults_active,
+                          retry_backoff)
+from repro.kernels.env_step import ops as EK
+from repro.traffic.arrivals import PoissonArrivals
+from repro.traffic.stream import ProcessTaskSource, StreamConfig, run_stream
+
+CHAOS = FaultSpec(seed=1, mtbf=150.0, mttr=40.0, straggler_prob=0.2,
+                  straggler_factor=3.0, max_retries=3, backoff_base=2.0,
+                  backoff_cap=30.0, retry_deadline=1000.0)
+
+
+def _cfg(E, num_models=1):
+    ms = tuple([1.0, 0.5, 2.0][:num_models]) if num_models > 1 else ()
+    return EV.EnvConfig(num_servers=E, max_tasks=2 * E + 4, queue_window=4,
+                        num_models=num_models, model_scale=ms)
+
+
+def _tc(ecfg):
+    return TraceConfig(num_tasks=ecfg.max_tasks, arrival_rate=0.2,
+                       max_servers=ecfg.num_servers,
+                       num_models=ecfg.num_models)
+
+
+def _fault_trace(ecfg, spec, seed=0, stream=0):
+    """One episodic trace with window-0 fault columns attached."""
+    trace = dict(make_trace(jax.random.PRNGKey(seed), _tc(ecfg)))
+    tl = FaultTimeline(spec, ecfg.num_servers, stream + 1)
+    fa = tl.window_arrays(0, np.zeros(stream + 1, np.float64),
+                          fault_horizon(ecfg.time_limit, spec))
+    trace.update({k: jnp.asarray(np.asarray(v)[stream]) for k, v in
+                  fa.items()})
+    return trace
+
+
+def _b1(tree):
+    return jax.tree_util.tree_map(lambda x: x[None], tree)
+
+
+def _assert_tree_equal(a, b, ctx):
+    fa = a._asdict() if hasattr(a, "_asdict") else a
+    fb = b._asdict() if hasattr(b, "_asdict") else b
+    for k in fa:
+        np.testing.assert_array_equal(np.asarray(fa[k]), np.asarray(fb[k]),
+                                      err_msg=f"{ctx}: field {k}")
+
+
+# ---------------------------------------------------------------- spec
+def test_fault_spec_activity():
+    assert not faults_active(None)
+    assert not faults_active(FaultSpec.none())
+    assert not FaultSpec.none().active
+    assert FaultSpec(mtbf=100.0).active
+    assert FaultSpec(straggler_prob=0.1).active
+    assert FaultSpec(exec_error_prob=0.1).active
+    assert FaultSpec(exec_timeout_s=5.0).active
+    assert FaultSpec.chaos().active
+    # hashable: it rides on the (hashable) ExecSpec into program caches
+    hash(FaultSpec.chaos())
+
+
+def test_retry_backoff_caps():
+    spec = FaultSpec(backoff_base=2.0, backoff_cap=30.0)
+    assert retry_backoff(spec, 1) == 2.0
+    assert retry_backoff(spec, 2) == 4.0
+    assert retry_backoff(spec, 4) == 16.0
+    assert retry_backoff(spec, 10) == 30.0       # capped
+
+
+# ---------------------------------------------------------------- timeline
+def test_fault_timeline_deterministic_and_pruned():
+    spec = FaultSpec(seed=7, mtbf=50.0, mttr=10.0, straggler_prob=0.3)
+    a = FaultTimeline(spec, 4, 2)
+    b = FaultTimeline(spec, 4, 2)
+    t0 = np.zeros(2, np.float64)
+    fa = a.window_arrays(0, t0, 400.0)
+    fb = b.window_arrays(0, t0, 400.0)
+    for k in FAULT_COLS:
+        np.testing.assert_array_equal(np.asarray(fa[k]), np.asarray(fb[k]),
+                                      err_msg=k)
+    # advancing the epoch prunes fully-past intervals: every kept interval
+    # must still overlap [t0, inf) after rebasing
+    t1 = np.full(2, 200.0)
+    fc = a.window_arrays(1, t1, 400.0)
+    de = np.asarray(fc["f_down_end"])
+    fin = np.isfinite(de)
+    assert np.all(de[fin] > 0.0), "fully-past down intervals leaked"
+    # a different seed moves the outage schedule
+    c = FaultTimeline(dataclasses.replace(spec, seed=8), 4, 2)
+    fc2 = c.window_arrays(0, t0, 400.0)
+    assert not all(np.array_equal(np.asarray(fa[k]), np.asarray(fc2[k]))
+                   for k in FAULT_COLS)
+
+
+# ---------------------------------------------------------------- per-step
+@pytest.mark.parametrize("E,num_models", [(4, 1), (8, 3)])
+def test_fault_step_three_way_parity(E, num_models):
+    """Legacy compositional step == jnp ref == Pallas kernel, bitwise,
+    on randomized states under active fault columns."""
+    ecfg = _cfg(E, num_models)
+    spec = FaultSpec(seed=E, mtbf=60.0, mttr=15.0, straggler_prob=0.4,
+                     straggler_factor=3.0)
+    rng = np.random.default_rng(E * 10 + num_models)
+    saw_fail = False
+    for trial in range(8):
+        trace = _fault_trace(ecfg, spec, seed=trial)
+        state = EV.reset(ecfg)._replace(
+            time=jnp.float32(rng.uniform(0.0, 60.0)))
+        statics = EV.decision_statics(ecfg, trace)
+        for col in FAULT_COLS:
+            assert col in statics
+        qv = EV.visible_queue(ecfg, trace, state)
+        a = jnp.asarray(rng.uniform(size=ecfg.action_dim).astype(np.float32))
+        ns_l, obs_l, r_l, d_l, info = EV.step(ecfg, trace, state, a)
+        saw_fail |= bool(np.asarray(info.get("failed", False)))
+        q2_l = EV.visible_queue(ecfg, trace, ns_l)
+        for impl in ("ref", "pallas"):
+            ns_f, q_f, obs_f, r_f, d_f = EK.env_step_fused(
+                ecfg, _b1(statics), _b1(state), a[None], _b1(qv), impl=impl)
+            ctx = f"E={E} nm={num_models} trial={trial} impl={impl}"
+            _assert_tree_equal(ns_l, jax.tree_util.tree_map(
+                lambda x: x[0], ns_f), ctx)
+            _assert_tree_equal(q2_l, jax.tree_util.tree_map(
+                lambda x: x[0], q_f), ctx + " queue")
+            np.testing.assert_array_equal(np.asarray(obs_l),
+                                          np.asarray(obs_f[0]), ctx)
+            assert float(r_l) == float(r_f[0]), ctx
+            assert bool(d_l) == bool(d_f[0]), ctx
+
+
+def test_fault_rollout_backend_parity():
+    """reference == fused(ref) == fused(pallas) episodic rollouts, bitwise,
+    under active faults — and at least one task actually fails."""
+    ecfg = EV.EnvConfig(num_servers=4, max_tasks=8, queue_window=4,
+                        max_steps=96)
+    spec = FaultSpec(seed=3, mtbf=60.0, mttr=20.0, straggler_prob=0.3)
+    tc = TraceConfig(num_tasks=8, arrival_rate=0.05, max_servers=4)
+    B = 4
+    traces = jax.vmap(lambda k: make_trace(k, tc))(
+        jax.random.split(jax.random.PRNGKey(3), B))
+    tl = FaultTimeline(spec, 4, B)
+    traces = dict(traces)
+    traces.update(tl.window_arrays(0, np.zeros(B, np.float64),
+                                   fault_horizon(ecfg.time_limit, spec)))
+    keys = jax.random.split(jax.random.PRNGKey(4), B)
+    pol = RO.greedy_policy(ecfg)
+    a = RO.batch_rollout(ecfg, traces, pol, {}, keys, fused=False)
+    assert "num_failed" in a.metrics
+    assert float(np.sum(np.asarray(a.metrics["num_failed"]))) > 0
+    for impl in ("ref", "pallas"):
+        b = RO.batch_rollout(ecfg, traces, pol, {}, keys, fused=True,
+                             fused_impl=impl)
+        for k in a.metrics:
+            np.testing.assert_array_equal(np.asarray(a.metrics[k]),
+                                          np.asarray(b.metrics[k]),
+                                          err_msg=f"{impl} metric {k}")
+        _assert_tree_equal(a.final_state, b.final_state, impl)
+
+
+def test_down_server_blocks_selection_and_obs():
+    """While a server is inside a down interval it is masked out of the
+    availability observation and cannot join a gang."""
+    ecfg = _cfg(4)
+    trace = dict(make_trace(jax.random.PRNGKey(0), _tc(ecfg)))
+    E, F = 4, 2
+    ds = np.full((E, F), np.inf, np.float32)
+    de = np.full((E, F), np.inf, np.float32)
+    ds[:, 0], de[:, 0] = 0.0, 1e6          # every server down, forever
+    trace["f_down_start"] = jnp.asarray(ds)
+    trace["f_down_end"] = jnp.asarray(de)
+    trace["f_slow"] = jnp.ones((E,), jnp.float32)
+    trace["f_cold"] = jnp.zeros((1,), jnp.float32)
+    state = EV.reset(ecfg)
+    obs = EV.observe(ecfg, trace, state)
+    # availability block of the observation must read all-down
+    ns, _, r, _, info = EV.step(
+        ecfg, trace, state,
+        jnp.asarray([0.0, 0.5, 1.0, 0.0, 0.0, 0.0], jnp.float32))
+    assert not bool(info["scheduled"])
+    assert float(np.asarray(obs).sum()) < float(
+        np.asarray(EV.observe(ecfg, {k: v for k, v in trace.items()
+                                     if not k.startswith("f_")},
+                              state)).sum())
+
+
+# ---------------------------------------------------------------- stream
+def _stream_run(faults, seed=0, windows=6, streams=2, K=16, E=8):
+    ecfg = EV.EnvConfig(num_servers=E, queue_window=4, max_tasks=K,
+                        time_limit=600.0, max_steps=256)
+    tc = TraceConfig(num_tasks=K)
+    key = jax.random.PRNGKey(seed)
+    src = ProcessTaskSource(PoissonArrivals(rate=0.2), tc, key,
+                            num_streams=streams)
+    scfg = StreamConfig(num_windows=windows, num_streams=streams,
+                        resp_sla=120.0, faults=faults)
+    return run_stream(ecfg, RO.greedy_policy(ecfg), None, src, key, scfg)
+
+
+def test_stream_faults_none_bitwise_identical():
+    base = _stream_run(None)
+    none = _stream_run(FaultSpec.none())
+    assert set(base.summary) == set(none.summary)
+    for k in base.summary:
+        assert base.summary[k] == none.summary[k], (
+            k, base.summary[k], none.summary[k])
+    assert none.fault_counters == {}
+
+
+def test_stream_fault_ledger_conserved_and_deterministic():
+    a = _stream_run(CHAOS)
+    s = a.summary
+    assert s["tasks_injected"] == (
+        s["tasks_scheduled"] + s["tasks_dropped"]
+        + s["tasks_failed_pending_retry"] + s["tasks_leftover"]), s
+    assert s["tasks_dropped"] == (s["tasks_dropped_shed"]
+                                  + s["tasks_dropped_retry_exhausted"])
+    assert s["tasks_failed"] > 0, "chaos spec produced no crashes"
+    assert s["tasks_retried"] > 0
+    b = _stream_run(CHAOS)
+    for k in s:
+        assert s[k] == b.summary[k], (k, s[k], b.summary[k])
+    assert a.fault_counters == b.fault_counters
+    assert a.fault_counters["tasks_pending_retry"] == \
+        s["tasks_failed_pending_retry"]
+
+
+def test_stream_fault_records_in_per_window():
+    res = _stream_run(CHAOS, windows=4)
+    for rec in res.per_window:
+        for key in ("failed", "retried", "failed_dropped", "pending_retry"):
+            assert key in rec, key
+        assert rec["failed"] >= 0
+
+
+# ---------------------------------------------------------------- serving
+def test_exec_fault_injector_deterministic():
+    spec = FaultSpec(seed=5, exec_error_prob=0.5)
+    a, b = ExecFaultInjector(spec), ExecFaultInjector(spec)
+
+    def draw(inj, n=64):
+        outs = []
+        for _ in range(n):
+            try:
+                inj.maybe_fail("generate")
+                outs.append(0)
+            except Exception:
+                outs.append(1)
+        return outs
+
+    seq = draw(a)
+    assert draw(b) == seq
+    assert 0 < sum(seq) < 64
+    a.reset()
+    assert draw(a) == seq                      # reset restores the stream
+    assert a.counters()["exec_errors_injected"] == sum(seq)
+    off = ExecFaultInjector(None)
+    assert not off.enabled
+    off.maybe_fail("generate")                 # no-op, never raises
+
+
+def test_server_pool_fault_ledger_resets():
+    from repro.serving.pool import ServerPool
+    pool = ServerPool(4)
+    assert set(pool.counters()) == {"model_loads", "model_reuses"}
+    pool.exec_failures, pool.exec_retries = 3, 2
+    pool.exec_degraded, pool.exec_gave_up, pool.crashed_tasks = 1, 1, 5
+    assert pool.fault_counters()["exec_failures"] == 3
+    pool.reset()
+    assert all(v == 0 for v in pool.fault_counters().values())
+    assert all(v == 0 for v in pool.counters().values())
+
+
+def test_serving_fault_state_isolated_between_runs():
+    """Satellite regression: a Simulator sweep must not leak fault/backoff
+    state between runs — same key, same spec => identical fault ledgers."""
+    from repro.api.simulator import Simulator
+    from repro.api.specs import ExecSpec, PolicySpec, WorkloadSpec
+    from repro.core import scenarios as SC
+    sc = SC.poisson_scenario(num_servers=4, rate=2.0)
+    wl = WorkloadSpec.streaming(sc, streams=1, num_windows=2, window_tasks=8)
+    spec = FaultSpec(seed=3, mtbf=60.0, mttr=15.0, exec_error_prob=0.6,
+                     exec_max_attempts=2, max_retries=2)
+    sim = Simulator(wl, ExecSpec(backend="serving", serving_execute=True,
+                                 faults=spec))
+    key = jax.random.PRNGKey(0)
+    r1 = sim.run(PolicySpec("greedy"), key)
+    fc1 = dict(sim._rollout.fault_counters())
+    r2 = sim.run(PolicySpec("greedy"), key)
+    fc2 = dict(sim._rollout.fault_counters())
+    assert fc1 == fc2, (fc1, fc2)    # reset() cleared pool + injector state
+    assert r1.summary["tasks_injected"] == r2.summary["tasks_injected"]
+    # executor warm memos may persist (compiled programs stay valid) but the
+    # failure/backoff ledger must start from zero each run
+    sim._rollout.reset()
+    assert all(v == 0 for v in sim._rollout.fault_counters().values())
