@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-all test-sharded train-stream-smoke serve-smoke trace-smoke chaos-smoke bench-rollout bench-traffic bench-env-step bench-sharded-rollout bench-stream-train bench-serving bench-decision-latency bench-faults traffic-sweep
+.PHONY: test test-all test-sharded train-stream-smoke serve-smoke trace-smoke chaos-smoke placement-smoke bench-rollout bench-traffic bench-env-step bench-sharded-rollout bench-stream-train bench-serving bench-decision-latency bench-faults bench-placement traffic-sweep
 
 test-sharded:    ## api backend + stream-training parity under 8 forced host devices
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 $(PY) -m pytest tests/test_api.py tests/test_stream_train.py -q
@@ -31,6 +31,9 @@ trace-smoke:     ## traced stream on fused + serving: schema-valid, bitwise-iden
 chaos-smoke:     ## fused + serving under an aggressive FaultSpec: ledger conserved, no silent loss, FaultSpec.none() bitwise-identical
 	$(PY) scripts/chaos_smoke.py
 
+placement-smoke: ## slow-timescale placement: PlacementSpec.none() bitwise-identical on fused/sharded/serving; lfu acts without perturbing arrivals
+	$(PY) scripts/placement_smoke.py
+
 bench-decision-latency:  ## per-decision inference latency of every registry policy -> BENCH_decision_latency.json
 	$(PY) benchmarks/bench_decision_latency.py
 
@@ -51,6 +54,9 @@ bench-env-step:  ## fused vs unfused env decision step -> BENCH_env_step.json
 
 bench-faults:    ## QoS-vs-fault-rate frontier, retry+degrade vs naive drop -> BENCH_faults.json
 	$(PY) benchmarks/bench_faults.py
+
+bench-placement: ## placement policies vs reactive loading on skewed non-stationary cells -> BENCH_placement.json
+	$(PY) benchmarks/bench_placement.py
 
 bench-sharded-rollout:  ## sharded vs fused backend eps/s -> BENCH_sharded_rollout.json
 	$(PY) benchmarks/bench_batch_rollout.py --sharded --devices 8

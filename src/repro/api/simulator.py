@@ -32,6 +32,7 @@ from repro.api import registry as REG
 from repro.api.specs import ExecSpec, PolicySpec, WorkloadSpec
 from repro.core.scenarios import Scenario, make_scenario_trace
 from repro.faults import FaultTimeline, fault_horizon, faults_active
+from repro.placement import placement_active
 from repro.telemetry import metrics as MET
 from repro.telemetry import profile as PROF
 from repro.telemetry.trace import jax_profile, tracer_for
@@ -96,6 +97,12 @@ class Simulator:
                 "serving backend runs ONE physical cluster; build the "
                 "workload with batch/streams=1, got "
                 f"{workload.batch}")
+        if placement_active(exec_spec.placement) \
+                and workload.mode != "streaming":
+            raise ValueError(
+                "placement is a streaming-only subsystem (the slow "
+                "timescale acts at window seams); use mode='streaming' or "
+                "drop ExecSpec.placement")
         self.tracer = tracer_for(exec_spec.trace)
         self._rollout = BK.rollout_fn_for(exec_spec)
 
@@ -210,7 +217,8 @@ class Simulator:
                             max_steps_per_window=wl.max_steps_per_window,
                             max_carry=wl.max_carry, resp_sla=wl.resp_sla,
                             chunk_size=wl.chunk_size,
-                            faults=self.exec_spec.faults)
+                            faults=self.exec_spec.faults,
+                            placement=self.exec_spec.placement)
         res = run_stream(self.ecfg, rp.policy, rp.params, source, k_run,
                          scfg, rollout_fn=self._rollout, collect=wl.collect,
                          tracer=self.tracer)
@@ -235,6 +243,12 @@ class Simulator:
             fault_ledger.update(self._rollout.fault_counters())
         if fault_ledger:
             self._publish_faults(fault_ledger, rp)
+        placement_ledger = dict(getattr(res, "placement_counters", {}) or {})
+        if placement_ledger:
+            if self.exec_spec.backend == "serving" and hasattr(
+                    self._rollout, "placement_counters"):
+                placement_ledger.update(self._rollout.placement_counters())
+            self._publish_placement(placement_ledger, summary, rp)
         return SimResult(policy=rp.name, trained=rp.trained, kind=rp.kind,
                          mode="streaming", backend=self.exec_spec.backend,
                          scenario=self.scenario.name, summary=summary,
@@ -246,6 +260,28 @@ class Simulator:
         registry (see docs/telemetry_schema.md)."""
         MET.publish_counters({k: int(v) for k, v in ledger.items()},
                              prefix="eat_fault", labels=self._labels(rp))
+
+    def _publish_placement(self, ledger: Dict, summary: Dict[str, float],
+                           rp: REG.ResolvedPolicy) -> None:
+        """Placement ledger -> ``eat_placement_*`` metrics: the host
+        counters, a warm-hit-rate gauge (the run's gang-reuse rate — what
+        pre-warming buys), and per-model cold-start-rate gauges labelled
+        ``{model=...}`` (see docs/telemetry_schema.md)."""
+        labels = self._labels(rp)
+        per_model = ledger.pop("per_model", {})
+        MET.publish_counters(
+            {k.removeprefix("placement_"): v for k, v in ledger.items()},
+            prefix="eat_placement", labels=labels)
+        reg = MET.default_registry()
+        if "reuse_rate" in summary:
+            reg.gauge("eat_placement_warm_hit_rate",
+                      "gang-reuse rate of a placement-enabled run").set(
+                float(summary["reuse_rate"]), labels=labels)
+        g = reg.gauge("eat_placement_cold_start_rate",
+                      "per-model reload fraction of scheduled tasks")
+        for m, row in per_model.items():
+            g.set(float(row["cold_start_rate"]),
+                  labels={**labels, "model": str(m)})
 
 
 # ----------------------------------------------------------------------

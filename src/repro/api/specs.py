@@ -24,6 +24,7 @@ from typing import Any, Mapping, Optional
 
 from repro.core.scenarios import Scenario
 from repro.faults import FaultSpec
+from repro.placement import PlacementSpec
 from repro.telemetry.trace import TraceConfig
 
 BACKENDS = ("reference", "fused", "sharded", "serving")
@@ -147,6 +148,18 @@ class ExecSpec:
     fault branch is keyed off the trace columns, so the compiled program
     is exactly the pre-fault one.
 
+    ``placement`` turns on the slow timescale (`repro.placement`):
+    a `PlacementSpec` names a placement policy ("static" | "lfu" |
+    "forecast" | registered) that decides at every stream-window seam
+    which models stay resident on which idle servers, pre-forming
+    complete gangs the fast scheduler reuses without a cold start (the
+    serving backend additionally prefetches/evicts the real weights off
+    the timed path). Streaming-only — it acts at window seams, so the
+    Simulator rejects it in episodic mode. ``None`` (the default) and
+    ``PlacementSpec.none()`` are bitwise-identical to a placement-free
+    run on every backend: placement only rewrites host-side carry state
+    between windows and never touches a compiled program.
+
     ``trace`` is the observability front door
     (`repro.telemetry.TraceConfig`): with ``enabled=True`` every layer a
     run touches — Simulator, StreamRunner, the streaming trainers, the
@@ -171,6 +184,7 @@ class ExecSpec:
     #                                  programs before timing tasks (None =
     #                                  on iff serving_wall_clock)
     faults: Optional[FaultSpec] = None  # deterministic fault injection
+    placement: Optional[PlacementSpec] = None  # slow-timescale placement
     trace: TraceConfig = TraceConfig()  # telemetry front door (see above)
 
     def __post_init__(self):

@@ -45,13 +45,20 @@ def _make(name: str, num_servers: int, rate: float, *, num_tasks: int = 32,
           num_models: int = 1, model_scale: Tuple[float, ...] = (),
           c_support: Tuple[int, ...] = (1, 2, 4, 8),
           c_probs: Tuple[float, ...] = (0.35, 0.35, 0.2, 0.1),
-          arrival=None) -> Scenario:
+          model_probs: Tuple[float, ...] = (), arrival=None) -> Scenario:
     ecfg = EV.EnvConfig(num_servers=num_servers, max_tasks=num_tasks,
                         num_models=num_models, model_scale=model_scale)
     tcfg = TraceConfig(num_tasks=num_tasks, arrival_rate=rate,
                        max_servers=num_servers, num_models=num_models,
-                       c_support=c_support, c_probs=c_probs)
+                       c_support=c_support, c_probs=c_probs,
+                       model_probs=model_probs)
     return Scenario(name=name, ecfg=ecfg, tcfg=tcfg, arrival=arrival)
+
+
+def zipf_probs(n: int, a: float = 1.5) -> Tuple[float, ...]:
+    """Zipf popularity over n models: p_k proportional to 1/(k+1)^a."""
+    w = np.arange(1, n + 1, dtype=np.float64) ** -float(a)
+    return tuple(float(x) for x in w / w.sum())
 
 
 def make_scenario_trace(key, sc: Scenario):
@@ -147,6 +154,57 @@ def flash_crowd(num_servers: int = 8, *, spike_factor: float = 8.0,
                  arrival=proc)
 
 
+def model_skew(num_servers: int = 8, num_models: int = 3, *,
+               zipf_a: float = 1.5,
+               model_scale: Tuple[float, ...] = (1.0, 0.6, 1.4)) -> Scenario:
+    """Zipf-skewed model popularity at the paper rate: a few hot services
+    dominate demand, so proactive placement (repro.placement) has a stable
+    signal to exploit (ISSUE 9 satellite)."""
+    return _make(f"modelskew-{num_models}x{num_servers}srv", num_servers,
+                 paper_rate_for(num_servers), num_models=num_models,
+                 model_scale=model_scale[:num_models],
+                 model_probs=zipf_probs(num_models, zipf_a))
+
+
+def model_skew_flashcrowd(num_servers: int = 8, num_models: int = 3, *,
+                          zipf_a: float = 1.5, spike_factor: float = 8.0,
+                          period: float = 2000.0,
+                          spike_duration: float = 200.0) -> Scenario:
+    """Zipf popularity under flash-crowd arrival spikes — the placement
+    benchmark's skewed cell (`BENCH_placement.json`): reactive loading
+    degenerates into cold-start storms at every spike, a demand-following
+    layout mostly rides them out."""
+    from repro.traffic.arrivals import FlashCrowdArrivals
+    base = paper_rate_for(num_servers)
+    proc = FlashCrowdArrivals(base_rate=base, spike_rate=base * spike_factor,
+                              period=period, spike_duration=spike_duration)
+    return _make(f"modelskew-flashcrowd-{num_models}x{num_servers}srv",
+                 num_servers, base, num_models=num_models,
+                 model_probs=zipf_probs(num_models, zipf_a), arrival=proc)
+
+
+def model_shift_cells(num_servers: int = 8, num_models: int = 3, *,
+                      zipf_a: float = 1.5, spike_factor: float = 8.0):
+    """Time-shifting popularity as a curriculum cell pair sharing one ecfg:
+    a Zipf-skewed base cell, then a flash crowd whose popularity is the
+    REVERSED Zipf — the crowd lands on the previously-coldest model.
+    Cycle them through `CurriculumTaskSource.set_cell` on one continuous
+    clock (`benchmarks/bench_placement.py` does) to test whether a
+    placement policy re-warms fast enough."""
+    from repro.traffic.arrivals import FlashCrowdArrivals, PoissonArrivals
+    base = paper_rate_for(num_servers)
+    probs = zipf_probs(num_models, zipf_a)
+    hot = _make(f"modelshift-base-{num_models}x{num_servers}srv",
+                num_servers, base, num_models=num_models, model_probs=probs,
+                arrival=PoissonArrivals(base))
+    cold = _make(f"modelshift-crowd-{num_models}x{num_servers}srv",
+                 num_servers, base, num_models=num_models,
+                 model_probs=tuple(reversed(probs)),
+                 arrival=FlashCrowdArrivals(base_rate=base,
+                                            spike_rate=base * spike_factor))
+    return [hot, cold]
+
+
 def traffic_grid(num_servers: int = 8) -> List[Scenario]:
     """Arrival-process cells for streaming sweeps (poisson baseline via
     paper_scenarios / arrival_sweep; these add the non-stationary ones)."""
@@ -190,6 +248,20 @@ def training_curriculum(ecfg: EV.EnvConfig, *,
             name="flashcrowd", ecfg=ecfg, tcfg=tc(base),
             arrival=FlashCrowdArrivals(base_rate=base,
                                        spike_rate=base * 8.0)))
+    if ecfg.num_models > 1:
+        # model-skew cells (ISSUE 9): Zipf-skewed popularity, plus a flash
+        # crowd whose popularity is the reversed Zipf — the crowd lands on
+        # the previously-coldest model, so the agent (and any placement
+        # policy riding along) trains against shifting popularity too
+        probs = zipf_probs(ecfg.num_models)
+        cells.append(Scenario(name="modelskew", ecfg=ecfg,
+                              tcfg=tc(base, model_probs=probs)))
+        if include_arrival_processes:
+            cells.append(Scenario(
+                name="modelshift", ecfg=ecfg,
+                tcfg=tc(base, model_probs=tuple(reversed(probs))),
+                arrival=FlashCrowdArrivals(base_rate=base,
+                                           spike_rate=base * 8.0)))
     return cells
 
 

@@ -23,6 +23,10 @@ class TraceConfig:
     num_models: int = 1                  # distinct AIGC services (arch ids)
     max_servers: int = 8                 # c_k is clipped to the cluster size
     quality_noise: float = 0.004         # per-task CLIP-score jitter
+    # per-model popularity; () keeps the historical uniform draw (and its
+    # exact PRNG path — existing configs stay bitwise-identical). Shorter
+    # tuples pad with zero, longer ones truncate; renormalised either way.
+    model_probs: Tuple[float, ...] = ()
 
 
 def _sample_attrs(k_c, k_model, k_noise, tc: TraceConfig, n: int):
@@ -35,7 +39,14 @@ def _sample_attrs(k_c, k_model, k_noise, tc: TraceConfig, n: int):
     probs = probs / probs.sum()
     idx = jax.random.categorical(k_c, jnp.log(probs + 1e-30), shape=(n,))
     c = support[idx]
-    model = jax.random.randint(k_model, (n,), 0, tc.num_models)
+    if tc.model_probs:
+        mp = jnp.zeros((tc.num_models,), jnp.float32).at[
+            :min(len(tc.model_probs), tc.num_models)].set(
+            jnp.asarray(tc.model_probs[:tc.num_models], jnp.float32))
+        model = jax.random.categorical(k_model, jnp.log(mp / mp.sum() + 1e-30),
+                                       shape=(n,))
+    else:
+        model = jax.random.randint(k_model, (n,), 0, tc.num_models)
     noise = tc.quality_noise * jax.random.normal(k_noise, (n,))
     return c, model.astype(jnp.int32), noise.astype(jnp.float32)
 

@@ -1,0 +1,111 @@
+"""`PlacementManager` — the slow timescale's stateful driver.
+
+One instance per `StreamRunner` (constructed only when the spec is
+active). The runner feeds it two host-side touchpoints per window:
+
+    observe_window(w, cols)   after `_build_window`: fold the window's
+                              (B, K) model/c columns into `DemandStats`
+    apply(carry, w)           after `_window_seam`: plan a layout from
+                              windows <= w and write it into the carried
+                              `EnvState` for window w+1
+
+`apply` mutates ONLY the host-side carry between windows — never a trace
+column, never a compiled program — so `placement=None` (no manager at all)
+runs byte-for-byte the programs and results it always did: a guarantee
+stronger than the faults pattern, which at least adds trace columns.
+
+Fault interaction needs no code here: the decision step's cold-restart
+wipe (`env.decision_step`) erases any placed cache whose server has
+crashed, idempotently, before every selection — a stale placement can
+never outlive a cold restart (pinned by tests/test_placement.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import env as EV
+from repro.placement.plan import StreamPlacement, plan_stream
+from repro.placement.policies import get_placement_policy
+from repro.placement.spec import PlacementSpec
+from repro.placement.stats import DEFAULT_C_SUPPORT, DemandStats
+from repro.telemetry.trace import NULL_TRACER
+
+
+class PlacementDecision(NamedTuple):
+    """One seam's applied placement: per-stream layouts + this decision's
+    counter deltas. Execution backends with real weights implement
+    `apply_placement(decision)` (serving prefetches/evicts off the timed
+    path); the simulated backends need nothing beyond the carry write."""
+    window: int
+    streams: List[StreamPlacement]
+    counters: Dict[str, int]
+
+
+class PlacementManager:
+    def __init__(self, spec: PlacementSpec, ecfg: EV.EnvConfig,
+                 num_streams: int = 1, tracer=None):
+        if not spec.active:
+            raise ValueError("PlacementManager needs an active spec; gate "
+                             "construction on placement_active(spec)")
+        self.spec = spec
+        self.ecfg = ecfg
+        self.B = int(num_streams)
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        # gang sizes larger than the cluster can never be placed
+        support = tuple(c for c in DEFAULT_C_SUPPORT
+                        if c <= ecfg.num_servers) or (1,)
+        self.stats = DemandStats(self.B, ecfg.num_models, support)
+        self._policy = get_placement_policy(spec.policy)
+        self._counters = {"decisions": 0, "gangs_planned": 0,
+                          "gangs_kept": 0, "gangs_bound": 0,
+                          "prefetches": 0, "evictions": 0}
+
+    # ------------------------------------------------------------------
+    def observe_window(self, window: int, cols: Dict[str, np.ndarray]
+                       ) -> None:
+        """Fold one built window's demand (host numpy columns)."""
+        self.stats.observe(cols["model"], cols["c"])
+
+    def apply(self, carry: EV.EnvState, window: int
+              ) -> "tuple[EV.EnvState, Optional[PlacementDecision]]":
+        """Plan + write the layout into the carried state at the seam after
+        `window`; returns the (possibly unchanged) carry and the decision
+        (None on off-interval seams)."""
+        if (window + 1) % self.spec.interval != 0:
+            return carry, None
+        K, E = self.ecfg.max_tasks, self.ecfg.num_servers
+        with self.tracer.span("placement_decide", cat="placement",
+                              window=window, policy=self.spec.policy):
+            free_at = np.asarray(carry.server_free_at)        # (B, E)
+            model = np.asarray(carry.server_model)
+            gang = np.asarray(carry.server_gang)
+            size = np.asarray(carry.server_gang_size)
+            streams: List[StreamPlacement] = []
+            for b in range(self.B):
+                weights = self._policy(self.spec, self.stats, b)
+                streams.append(plan_stream(
+                    weights, free_at[b] <= 0.0, model[b], gang[b], size[b],
+                    self.stats.c_support, K,
+                    self.spec.max_gangs_per_cell))
+            deltas = {k: sum(s.counters[k] for s in streams)
+                      for k in streams[0].counters}
+            deltas["decisions"] = 1
+            for k, v in deltas.items():
+                self._counters[k] += v
+            carry = carry._replace(
+                server_model=jnp.asarray(
+                    np.stack([s.model for s in streams])),
+                server_gang=jnp.asarray(
+                    np.stack([s.gang for s in streams])),
+                server_gang_size=jnp.asarray(
+                    np.stack([s.gang_size for s in streams])))
+        return carry, PlacementDecision(window=window, streams=streams,
+                                        counters=deltas)
+
+    # ------------------------------------------------------------------
+    def counters(self) -> Dict[str, int]:
+        """Cumulative host ledger (`eat_placement_*` in the registry)."""
+        return {f"placement_{k}": int(v) for k, v in self._counters.items()}

@@ -162,6 +162,12 @@ class ServingRollout:
         self.measured_busy: list = []       # wall seconds per executed task
         self._load_key = jax.random.PRNGKey(seed)
         self._prompt_rng = np.random.default_rng(seed)
+        # placement prefetch draws weights from its OWN key stream so the
+        # on-demand `_load` sequence — and with it every scheduled task's
+        # weights — is identical to a placement-free run
+        self._prefetch_key = jax.random.PRNGKey(seed ^ 0x5EED)
+        self.placement_prefetches = 0
+        self.placement_evictions = 0
 
     # ------------------------------------------------------------------
     def reset(self) -> None:
@@ -175,6 +181,9 @@ class ServingRollout:
         self.measured_busy = []
         self._load_key = jax.random.PRNGKey(self.seed)
         self._prompt_rng = np.random.default_rng(self.seed)
+        self._prefetch_key = jax.random.PRNGKey(self.seed ^ 0x5EED)
+        self.placement_prefetches = 0
+        self.placement_evictions = 0
 
     def serving_stats(self) -> Dict[str, float]:
         out = dict(self.pool.counters())
@@ -182,7 +191,14 @@ class ServingRollout:
         if self.measured_busy:
             out["measured_busy_mean_s"] = float(np.mean(self.measured_busy))
         out.update(self.profile.summary())
+        out.update(self.placement_counters())
         return out
+
+    def placement_counters(self) -> Dict[str, int]:
+        """Real-weight prefetch/evict ledger (zero in a placement-free
+        run); kept off `pool.counters()`, whose key set is pinned."""
+        return {"placement_weight_prefetches": self.placement_prefetches,
+                "placement_weight_evictions": self.placement_evictions}
 
     def pool_counters(self) -> Dict[str, int]:
         """The pool's monotonic load/reuse/shed ledger alone (metrics
@@ -292,6 +308,47 @@ class ServingRollout:
             server.params = self.executor.init_params(arch, k)
         server.model_name = arch
         self.pool.load_count += 1
+
+    # ------------------------------------------------------------------
+    def apply_placement(self, decision) -> None:
+        """Materialise a seam placement in the real pool, OFF the timed
+        path: evict weights the plan displaced, prefetch the planned
+        models (own PRNG stream — the `_load` sequence stays identical to
+        a placement-free run), and pre-compile each placed gang's
+        executor programs via the warmup machinery. A subsequent matching
+        gang hits `_run_task`'s reuse path with the weights already
+        resident — the mirror and the pool agree the start is warm."""
+        sp = decision.streams[0]            # serving is one physical cluster
+        for i in np.flatnonzero(sp.evict):
+            s = self.pool.servers[i]
+            with self.tracer.span("evict", cat="placement", server=int(i),
+                                  arch=s.model_name or ""):
+                s.params, s.model_name = None, None
+            self.placement_evictions += 1
+        warmed = set()
+        for i in np.flatnonzero(sp.prefetch):
+            arch = self._arch_of(int(sp.model[i]))
+            s = self.pool.servers[i]
+            if s.model_name != arch or s.params is None:
+                with self.tracer.span("prefetch", cat="placement",
+                                      server=int(i), arch=arch):
+                    self._prefetch_key, k = jax.random.split(
+                        self._prefetch_key)
+                    s.params = self.executor.init_params(arch, k)
+                    s.model_name = arch
+                self.placement_prefetches += 1
+            # mirror the carry's synthetic gang into the pool bookkeeping,
+            # so pool-level reuse queries see the placed gang as complete
+            s.gang = int(sp.gang[i])
+            s.gang_size = int(sp.gang_size[i])
+            c = int(sp.gang_size[i])
+            if self.execute and self.warmup and (arch, c) not in warmed:
+                warmed.add((arch, c))
+                with self.tracer.span("executor_warmup", cat="serving",
+                                      arch=arch, c=c):
+                    self.executor.warm(arch, self.prompt_len, c,
+                                       self.max_new_tokens,
+                                       self.max_new_tokens)
 
     # ------------------------------------------------------------------
     def __call__(self, ecfg: EV.EnvConfig, traces: Dict, policy, params,
@@ -450,5 +507,12 @@ def _from_spec(spec) -> "ServingRollout":
 
         def fault_counters(self):
             return self.inner.fault_counters() if self.inner else {}
+
+        def apply_placement(self, decision):
+            if self.inner is not None:      # placement fires after the
+                self.inner.apply_placement(decision)   # first window ran
+
+        def placement_counters(self):
+            return self.inner.placement_counters() if self.inner else {}
 
     return _Lazy()

@@ -175,7 +175,7 @@ class ServingEngine:
         gang = self.pool.find_reusable_gang(req.arch, req.patches, now)
         reused = gang is not None
         if gang is None:
-            gang = self.pool.pick_fresh(req.patches, now)
+            gang = self.pool.pick_fresh(req.patches, now, arch=req.arch)
             if gang is None:
                 self._advance(1.0)
                 return None              # infeasible: not enough idle servers

@@ -64,9 +64,17 @@ class ServerPool:
                 return members
         return None
 
-    def pick_fresh(self, c: int, now: float) -> Optional[List[LogicalServer]]:
+    def pick_fresh(self, c: int, now: float,
+                   arch: Optional[str] = None) -> Optional[List[LogicalServer]]:
         """Fragmentation-aware greedy (§V.B.4): prefer breaking already-broken
-        gangs; among intact gangs break the smallest."""
+        gangs; among intact gangs break the smallest.
+
+        Among equally fragmented candidates, servers already holding `arch`
+        rank first — a fresh gang on warm idle servers skips their weight
+        loads instead of cold-loading next to them (ISSUE 9 satellite).
+        Pool-only: the simulated `_select_servers` keeps its historical
+        order, whose bitwise-parity gates pin the compiled decision math
+        (`arch=None` reproduces the historical order exactly)."""
         idle = self.idle(now)
         if len(idle) < c:
             return None
@@ -79,7 +87,11 @@ class ServerPool:
                        if t.gang == s.gang and t.gang_size == s.gang_size]
             return all(t.sid in idle_ids for t in members)
 
-        idle.sort(key=lambda s: (intact(s) * (100 + 10 * s.gang_size), s.sid))
+        def arch_miss(s: LogicalServer) -> int:
+            return 0 if (arch is None or s.model_name == arch) else 1
+
+        idle.sort(key=lambda s: (intact(s) * (100 + 10 * s.gang_size),
+                                 arch_miss(s), s.sid))
         return idle[:c]
 
     # -- economics ------------------------------------------------------

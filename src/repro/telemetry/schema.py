@@ -42,6 +42,10 @@ KNOWN_SPANS: Dict[str, Tuple[str, str]] = {
     # serving fault tolerance (repro.serving.backend)
     "executor_retry":   ("serving",  "serving.ServingRollout"),
     "executor_degrade": ("serving",  "serving.ServingRollout"),
+    # slow-timescale placement (repro.placement / serving.backend)
+    "placement_decide": ("placement", "placement.PlacementManager"),
+    "prefetch":         ("placement", "serving.ServingRollout"),
+    "evict":            ("placement", "serving.ServingRollout"),
 }
 
 _EVENT_SCHEMA = {

@@ -35,6 +35,7 @@ from repro.core.rollout import Transitions
 from repro.core.workload import TraceConfig, sample_task_attrs
 from repro.faults import (RETRY_COL, FaultSpec, FaultTimeline, fault_horizon,
                           faults_active, retry_backoff)
+from repro.placement import PlacementManager, PlacementSpec, placement_active
 from repro.telemetry.trace import NULL_TRACER
 from repro.traffic import metrics as MX
 
@@ -56,6 +57,11 @@ class StreamConfig:
     faults: Optional[FaultSpec] = None      # deterministic fault injection;
     #                                         None / FaultSpec.none() =
     #                                         bitwise-identical fault-free run
+    placement: Optional[PlacementSpec] = None   # slow-timescale proactive
+    #                                         model placement at window seams
+    #                                         (repro.placement); None /
+    #                                         PlacementSpec.none() = bitwise-
+    #                                         identical placement-free run
 
 
 # ----------------------------------------------------------------------
@@ -169,9 +175,10 @@ class TraceTaskSource:
 
 
 # ----------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("ecfg",))
+@functools.partial(jax.jit, static_argnames=("ecfg", "per_model"))
 def _window_seam(ecfg: EV.EnvConfig, traces: Dict, state: EV.EnvState,
-                 edges: jnp.ndarray, resp_sla: jnp.ndarray):
+                 edges: jnp.ndarray, resp_sla: jnp.ndarray,
+                 per_model: bool = False):
     """Device-side seam: per-window QoS stats + next-window carry state +
     compacted leftovers, vmapped over the stream axis.
 
@@ -182,7 +189,12 @@ def _window_seam(ecfg: EV.EnvConfig, traces: Dict, state: EV.EnvState,
     crash fell inside this window — the next window's fault arrays drop
     fully-past intervals, so the wipe must happen here. Mode is a static
     property of the trace structure: fault-free traces compile the exact
-    program they always did."""
+    program they always did.
+
+    `per_model=True` (static; on iff placement is active) adds per-model
+    scheduled/reload counts to the stats — the source of the
+    `eat_placement_cold_start_rate{model=...}` telemetry labels. The
+    default compiles exactly the historical program."""
     K, E = ecfg.max_tasks, ecfg.num_servers
     faulty = "f_down_start" in traces
 
@@ -217,6 +229,14 @@ def _window_seam(ecfg: EV.EnvConfig, traces: Dict, state: EV.EnvState,
         if faulty:
             stats["n_failed"] = jnp.sum(
                 (st.task_status == 3).astype(jnp.int32))
+        if per_model:
+            oh = jax.nn.one_hot(jnp.clip(trace["model"], 0,
+                                         ecfg.num_models - 1),
+                                ecfg.num_models, dtype=jnp.float32)  # (K, M)
+            stats["n_sched_m"] = jnp.sum(oh * fsch[:, None], axis=0)
+            stats["n_reload_m"] = jnp.sum(
+                oh * (fsch * st.task_reload.astype(jnp.float32))[:, None],
+                axis=0)
 
         # ---- carry: rebase the clock, keep server occupancy + gang ids --
         gang = st.server_gang
@@ -281,6 +301,9 @@ class StreamResult(NamedTuple):
     final_carry: EV.EnvState
     transitions: Optional[List[Transitions]] = None   # per window, collect=
     fault_counters: Dict = {}          # host fault ledger (empty: faults off)
+    placement_counters: Dict = {}      # slow-timescale placement ledger
+    #                                    (empty: placement off); includes a
+    #                                    nested "per_model" cold-start table
 
 
 class WindowResult(NamedTuple):
@@ -358,6 +381,14 @@ class StreamRunner:
                  "retries": np.zeros((0,), np.int32),
                  "ready_abs": np.zeros((0,), np.float64)}
                 for _ in range(B)]
+        # ---- slow timescale: proactive model placement at window seams --
+        self.placement = None
+        if placement_active(scfg.placement):
+            self.placement = PlacementManager(scfg.placement, ecfg, B,
+                                              tracer=self.tracer)
+            # per-model scheduled/reload tallies (cold-start-rate labels)
+            self._pm_sched = np.zeros(ecfg.num_models, np.float64)
+            self._pm_reload = np.zeros(ecfg.num_models, np.float64)
 
     # ------------------------------------------------------------------
     def _build_window(self):
@@ -431,6 +462,12 @@ class StreamRunner:
             with tr.span("build_window", cat="stream", window=w):
                 (cols, n_injected, n_dropped, n_carried,
                  n_readmit) = self._build_window()
+                if self.placement is not None:
+                    # demand for the slow timescale: this window's tasks,
+                    # folded BEFORE the rollout but only consulted at the
+                    # seam AFTER it — the layout for window w+1 sees
+                    # arrivals of windows <= w, never its own
+                    self.placement.observe_window(w, cols)
                 traces = {c: jnp.asarray(v) for c, v in cols.items()}
                 if self.faults is not None:
                     fa = self.timeline.window_arrays(w, self.t0,
@@ -460,7 +497,8 @@ class StreamRunner:
                     jax.block_until_ready(res.final_state)
             with tr.span("window_seam", cat="stream", window=w):
                 seam = _window_seam(self.ecfg, traces, res.final_state,
-                                    self._edges, self._sla)
+                                    self._edges, self._sla,
+                                    per_model=self.placement is not None)
                 if self.faults is not None:
                     stats, self.carry, lcols, n_left, fcols, n_fail = seam
                     lcols_keys = _COLS + (RETRY_COL,)
@@ -474,6 +512,15 @@ class StreamRunner:
                                    for c in lcols_keys}
                                   for b in range(self.B)]
                 self.t0 += np.asarray(stats["elapsed"], np.float64)
+            if self.placement is not None:
+                # slow timescale: rewrite the carried host state (idle
+                # servers only) and let a real-weight backend prefetch
+                # off the timed path
+                self.carry, decision = self.placement.apply(self.carry, w)
+                if decision is not None:
+                    hook = getattr(self.rollout_fn, "apply_placement", None)
+                    if hook is not None:
+                        hook(decision)
 
         n_retried = np.zeros(self.B, np.int64)
         n_fail_drop = np.zeros(self.B, np.int64)
@@ -487,6 +534,11 @@ class StreamRunner:
 
         tr.counter("backlog", float(n_left.sum()), window=w)
         rec = {k: np.asarray(v) for k, v in stats.items()}
+        if self.placement is not None:
+            # per-model tallies are placement telemetry, not window-ledger
+            # rows: fold them here and keep the aggregator's schema fixed
+            self._pm_sched += rec.pop("n_sched_m").sum(axis=0)
+            self._pm_reload += rec.pop("n_reload_m").sum(axis=0)
         rec["n_injected"] = n_injected
         rec["n_dropped"] = n_dropped
         rec["n_carried"] = n_carried
@@ -583,6 +635,22 @@ class StreamRunner:
         out["tasks_pending_retry"] = self.pending_retry()
         return out
 
+    def placement_counters(self) -> Dict:
+        """Slow-timescale placement ledger (empty when placement is off):
+        the manager's cumulative counts plus a nested "per_model" table of
+        {model: {scheduled, reloads, cold_start_rate}} — the source of the
+        per-model cold-start-rate telemetry labels."""
+        if self.placement is None:
+            return {}
+        out = dict(self.placement.counters())
+        out["per_model"] = {
+            int(m): {"scheduled": float(self._pm_sched[m]),
+                     "reloads": float(self._pm_reload[m]),
+                     "cold_start_rate": float(
+                         self._pm_reload[m] / max(self._pm_sched[m], 1.0))}
+            for m in range(self.ecfg.num_models)}
+        return out
+
     def result(self, transitions: Optional[List[Transitions]] = None
                ) -> StreamResult:
         summary = self.agg.summary()
@@ -593,7 +661,8 @@ class StreamRunner:
         return StreamResult(summary=summary, per_window=self.per_window,
                             aggregator=self.agg, final_carry=self.carry,
                             transitions=transitions,
-                            fault_counters=self.fault_counters())
+                            fault_counters=self.fault_counters(),
+                            placement_counters=self.placement_counters())
 
 
 # ----------------------------------------------------------------------

@@ -155,7 +155,8 @@ def _make_runner(ecfg, cells, key, stcfg: StreamTrainConfig, exec_spec,
         max_steps_per_window=stcfg.max_steps_per_window,
         max_carry=stcfg.max_carry, resp_sla=stcfg.resp_sla,
         chunk_size=stcfg.chunk_size,
-        faults=getattr(exec_spec, "faults", None))
+        faults=getattr(exec_spec, "faults", None),
+        placement=getattr(exec_spec, "placement", None))
     rollout = rollout_fn_for(exec_spec or ExecSpec())
     tracer = tracer_for(getattr(exec_spec, "trace", None))
     runner = StreamRunner(ecfg, policy, params, source, k_stream, scfg,
