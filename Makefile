@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-all test-sharded train-stream-smoke serve-smoke trace-smoke chaos-smoke placement-smoke bench-rollout bench-traffic bench-env-step bench-sharded-rollout bench-stream-train bench-serving bench-decision-latency bench-faults bench-placement traffic-sweep
+.PHONY: test test-all test-sharded train-stream-smoke serve-smoke trace-smoke chaos-smoke placement-smoke actor-smoke bench-rollout bench-traffic bench-env-step bench-sharded-rollout bench-stream-train bench-serving bench-decision-latency bench-faults bench-placement traffic-sweep
 
 test-sharded:    ## api backend + stream-training parity under 8 forced host devices
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 $(PY) -m pytest tests/test_api.py tests/test_stream_train.py -q
@@ -33,6 +33,9 @@ chaos-smoke:     ## fused + serving under an aggressive FaultSpec: ledger conser
 
 placement-smoke: ## slow-timescale placement: PlacementSpec.none() bitwise-identical on fused/sharded/serving; lfu acts without perturbing arrivals
 	$(PY) scripts/placement_smoke.py
+
+actor-smoke:     ## compiled-inference layer: sampler="ddpm" bitwise vs the pre-refactor door on fused/sharded/serving; chain kernel bitwise vs oracle; ddim/distilled deterministic parity
+	$(PY) scripts/actor_smoke.py
 
 bench-decision-latency:  ## per-decision inference latency of every registry policy -> BENCH_decision_latency.json
 	$(PY) benchmarks/bench_decision_latency.py

@@ -6,8 +6,12 @@
 Reads a Chrome trace-event JSON (or its JSONL sidecar) emitted by
 `repro.telemetry` and prints one row per span name — count, total, mean,
 and self time (total minus directly nested spans) — sorted by self time,
-plus the final value of every counter track. `--validate` additionally
-schema-checks the file (strict span names) and exits non-zero on problems.
+plus the final value of every counter track. Spans that carry a
+``sampler`` attribute (serving ``decision`` spans, stream ``window``
+spans — the diffusion actor's sampler label) split into per-sampler rows
+(``decision[ddim:5]``), so the self-time table attributes inference cost
+to the sampler that paid it. `--validate` additionally schema-checks the
+file (strict span names) and exits non-zero on problems.
 """
 from __future__ import annotations
 
@@ -22,6 +26,18 @@ def load_events(path: str):
             return [json.loads(line) for line in f if line.strip()]
     with open(path) as f:
         return json.load(f)["traceEvents"]
+
+
+def split_by_sampler(events):
+    """Rename complete spans carrying a `sampler` attr to `name[sampler]`
+    so `span_durations` aggregates them per sampler. Non-span events and
+    unlabelled spans pass through untouched."""
+    out = []
+    for e in events:
+        s = (e.get("args") or {}).get("sampler") if e.get("ph") == "X" \
+            else None
+        out.append({**e, "name": f"{e['name']}[{s}]"} if s else e)
+    return out
 
 
 def main(argv=None) -> int:
@@ -43,14 +59,15 @@ def main(argv=None) -> int:
         print(f"trace OK: {args.trace}")
 
     events = load_events(args.trace)
-    rows = span_durations(events)
+    rows = span_durations(split_by_sampler(events))
     if rows:
         wall = max(r["total_s"] for r in rows.values())
-        print(f"{'span':<18s} {'count':>7s} {'total_s':>10s} "
+        w = max(18, max(len(n) for n in rows))
+        print(f"{'span':<{w}s} {'count':>7s} {'total_s':>10s} "
               f"{'mean_s':>10s} {'self_s':>10s} {'self%':>6s}")
         for name, r in sorted(rows.items(),
                               key=lambda kv: -kv[1]["self_total_s"]):
-            print(f"{name:<18s} {r['count']:7d} {r['total_s']:10.4f} "
+            print(f"{name:<{w}s} {r['count']:7d} {r['total_s']:10.4f} "
                   f"{r['mean_s']:10.6f} {r['self_total_s']:10.4f} "
                   f"{100 * r['self_total_s'] / max(wall, 1e-12):5.1f}%")
     counters = {}

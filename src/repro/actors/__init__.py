@@ -1,0 +1,24 @@
+"""repro.actors — the unified compiled-inference (actor) layer.
+
+One `ActorProgram` per (EnvConfig, policy callable) owns every compiled
+view of policy inference — the per-decision jitted program the serving
+backend and the latency probe share, and the vmapped view the fused
+rollout scan consumes. `actor_policy` is the one door to the EAT actor
+with its sampler family ("ddpm" | "ddim:K" | "distilled"); the registry
+(`PolicySpec(..., sampler=...)`) resolves through it, so Simulator,
+StreamRunner, stream training, and serving all pick up a sampler choice
+with no per-layer changes. See docs/actors.md.
+"""
+from repro.actors.policies import actor_policy, init_student
+from repro.actors.program import ActorProgram, actor_program
+from repro.actors.samplers import (chain_sample, ddim_coeffs, ddim_taus,
+                                   ddpm_coeffs, distilled_sample,
+                                   normalize_sampler, parse_sampler)
+
+__all__ = [
+    "ActorProgram", "actor_program",
+    "actor_policy", "init_student",
+    "parse_sampler", "normalize_sampler",
+    "ddpm_coeffs", "ddim_coeffs", "ddim_taus",
+    "chain_sample", "distilled_sample",
+]

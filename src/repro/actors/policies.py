@@ -1,0 +1,92 @@
+"""The unified EAT actor door: one cached factory for every sampler.
+
+`actor_policy(ecfg, acfg, deterministic, sampler)` builds (and caches) the
+rollout-protocol callable for the diffusion/Gaussian actor:
+
+* ``sampler="ddpm"`` (default) — the paper's full T-step chain via
+  `agent.actor_sample`. The closure body is exactly the pre-refactor
+  `core.sac.actor_policy` body, and `sac.actor_policy` now delegates here,
+  so the default actor is the SAME cached callable object everywhere —
+  compiled-program caches (jit statics) keep hitting, and results stay
+  bitwise-identical to the pre-refactor path on every backend
+  (`make actor-smoke` gates this).
+* ``sampler="ddim:K"`` / ``"distilled"`` — the fast samplers
+  (`actors.samplers`) produce the action mean; the sigma head, Gaussian
+  exploration, and clipping replicate `agent.actor_sample`'s tail on the
+  same (kd, ks) key split, so swapping samplers changes only how the mean
+  is computed.
+
+Fast samplers require a diffusion variant ("eat"/"eat-a"); the Gaussian
+ablations have no denoiser to stride or distill. "distilled" additionally
+expects ``params["student"]`` — a denoiser-shaped head trained by
+`training.distill` (or fresh via `init_student`, flagged untrained by the
+registry).
+
+Every returned callable carries ``policy.sampler`` (normalized label) for
+telemetry attribution — serving decision spans, stream window spans, and
+the metrics registry label decisions per sampler with it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.actors import samplers as SMP
+from repro.core import agent as AG
+from repro.core import diffusion as DF
+from repro.core import env as EV
+
+
+def actor_policy(ecfg: EV.EnvConfig, acfg: AG.AgentConfig,
+                 deterministic: bool = False, sampler: str = "ddpm"):
+    """Diffusion/Gaussian actor as a batch_rollout policy; actor weights
+    are the traced `params`, so training updates never recompile. The
+    callable is cached on (ecfg, acfg, deterministic, normalized sampler)."""
+    return _build_policy(ecfg, acfg, bool(deterministic),
+                         SMP.normalize_sampler(sampler))
+
+
+@functools.lru_cache(maxsize=None)
+def _build_policy(ecfg, acfg, deterministic, sampler):
+    kind, K = SMP.parse_sampler(sampler)
+    if kind != "ddpm" and acfg.policy != "diffusion":
+        raise ValueError(
+            f"sampler {sampler!r} needs a diffusion actor; variant "
+            f"{acfg.variant!r} is Gaussian — only 'ddpm' applies")
+    sched = DF.vp_schedule(acfg.T)
+
+    if kind == "ddpm":
+        def policy(params, key, trace, state, obs):
+            a, _, _, _ = AG.actor_sample(params, acfg, ecfg, sched, obs, key,
+                                         deterministic=deterministic)
+            return AG.to_env_action(a), {"agent_action": a}
+    else:
+        def policy(params, key, trace, state, obs):
+            kd, ks = jax.random.split(key)
+            f_s = AG._encode(params, acfg, ecfg, obs)
+            if kind == "ddim":
+                mean = SMP.chain_sample(params["denoiser"], sched, f_s, kd,
+                                        ecfg.action_dim, kind="ddim", K=K)
+            else:
+                mean = SMP.distilled_sample(params["student"], f_s, kd,
+                                            ecfg.action_dim, acfg.T)
+            log_sigma = jnp.clip(
+                mean @ params["sigma_head"]["w"] + params["sigma_head"]["b"],
+                acfg.log_sigma_min, acfg.log_sigma_max)
+            eps = jax.random.normal(ks, mean.shape)
+            a = mean if deterministic else mean + jnp.exp(log_sigma) * eps
+            a = jnp.clip(a, -1.0, 1.0)
+            return AG.to_env_action(a), {"agent_action": a}
+
+    policy.sampler = sampler
+    return policy
+
+
+def init_student(key, ecfg: EV.EnvConfig, acfg: AG.AgentConfig):
+    """Fresh distilled-student head: denoiser-shaped (same input layout —
+    concat(x, t_emb, f_s) — and the same tanh-bounded output), so the
+    student reuses the fused `denoiser_step` kernel unchanged."""
+    feat_dim = ecfg.obs_shape[1]
+    return DF.init_denoiser(key, ecfg.action_dim, feat_dim, acfg.hidden)

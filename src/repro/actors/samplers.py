@@ -1,0 +1,161 @@
+"""Sampler family for the diffusion actor: one set of denoiser weights,
+three ways to turn them into an action mean.
+
+* ``"ddpm"`` — the paper's full T-step reverse chain
+  (`core.diffusion.reverse_sample`); the bitwise-canonical default.
+* ``"ddim:K"`` — deterministic DDIM (eta = 0) over a strided subset of K
+  timesteps. Zero retraining: the same eps-network is queried at K ≪ T
+  indices, so decision latency drops ~T/K at a small quality cost.
+* ``"distilled"`` — a consistency-distilled student head (one
+  denoiser-shaped MLP call, trained by `training.distill` to regress the
+  frozen teacher chain's x_0 from the same (x_T, f_s) pair). One forward
+  pass per decision.
+
+Both fast samplers run through the affine chain executors in
+`kernels/denoiser` — step j: x <- c_x[j] x + c_e[j] eps + c_n[j] noise —
+so the DDPM posterior and the DDIM update share one kernel; only the
+(K,)-coefficient vectors built here differ. PRNG convention mirrors
+`agent.actor_sample`/`diffusion.reverse_sample` exactly: the caller's
+chain key `kd` splits into (kx, kn); x_T is drawn from kx — teacher and
+student therefore see the SAME x_T for a given decision key, which is what
+makes deterministic-mode distillation parity meaningful.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import diffusion as DF
+from repro.kernels.denoiser import ops as KOPS
+
+SAMPLER_KINDS = ("ddpm", "ddim", "distilled")
+
+
+def parse_sampler(sampler: Optional[str]) -> Tuple[str, Optional[int]]:
+    """"ddpm" | "ddim:K" | "distilled" -> (kind, K). None means "ddpm"."""
+    if sampler is None:
+        return "ddpm", None
+    s = str(sampler).strip().lower()
+    if s in ("ddpm", "distilled"):
+        return s, None
+    if s.startswith("ddim:"):
+        try:
+            K = int(s.split(":", 1)[1])
+        except ValueError:
+            raise ValueError(
+                f"bad ddim sampler {sampler!r}: expected 'ddim:K' with "
+                "integer K") from None
+        if K < 1:
+            raise ValueError(f"ddim step count must be >= 1, got {K}")
+        return "ddim", K
+    raise ValueError(
+        f"unknown sampler {sampler!r}; choose 'ddpm', 'ddim:K' or "
+        "'distilled'")
+
+
+def normalize_sampler(sampler: Optional[str]) -> str:
+    kind, K = parse_sampler(sampler)
+    return f"ddim:{K}" if kind == "ddim" else kind
+
+
+# ----------------------------------------------------------------------
+# affine chain coefficients (step j of K denoises timestep index idx[j])
+def ddpm_coeffs(sched: DF.DiffusionSchedule):
+    """Full-chain DDPM posterior (Eq. 10/12) as affine coefficients.
+
+    Returns (coef_x, coef_e, coef_n, t_in), each (T,), ordered j = 0..T-1
+    over timestep indices i = T-1..0; `t_in = i + 1` is the integer fed to
+    the timestep embedding (matching `reverse_sample`)."""
+    T = sched.betas.shape[0]
+    i = jnp.arange(T - 1, -1, -1)
+    beta = sched.betas[i]
+    alpha = sched.alphas[i]
+    abar = sched.alpha_bars[i]
+    abar_prev = jnp.where(i > 0, sched.alpha_bars[jnp.maximum(i - 1, 0)],
+                          1.0)
+    coef_x = 1.0 / jnp.sqrt(alpha)
+    coef_e = -(beta / jnp.sqrt(1.0 - abar)) / jnp.sqrt(alpha)
+    var = beta * (1.0 - abar_prev) / (1.0 - abar)
+    coef_n = jnp.where(i > 0, jnp.sqrt(jnp.maximum(var, 1e-12)), 0.0)
+    return coef_x, coef_e, coef_n, i + 1
+
+
+def ddim_taus(T: int, K: int) -> np.ndarray:
+    """K strided timestep indices, descending T-1 .. 0.
+
+    Evenly spaced with floor; for K <= T consecutive values differ by
+    >= (T-1)/(K-1) >= 1, so the floors are strictly decreasing."""
+    if not 1 <= K <= T:
+        raise ValueError(f"ddim step count must be in [1, T={T}], got {K}")
+    if K == 1:
+        return np.array([T - 1], dtype=np.int64)
+    return np.floor(np.linspace(T - 1, 0, K)).astype(np.int64)
+
+
+def ddim_coeffs(sched: DF.DiffusionSchedule, K: int):
+    """Deterministic DDIM (eta = 0) over the strided subset:
+
+        x_prev = sqrt(abar_prev) * x0_pred + sqrt(1 - abar_prev) * eps,
+        x0_pred = (x - sqrt(1 - abar) * eps) / sqrt(abar)
+
+    expanded into the shared affine-chain form. coef_n is identically 0 —
+    the chain is noise-free, which is what serving's deterministic mode
+    relies on. The final step (idx 0) uses abar_prev = 1: x = x0_pred."""
+    T = int(sched.betas.shape[0])
+    idx = ddim_taus(T, K)
+    abar = sched.alpha_bars[idx]
+    nxt = np.concatenate([idx[1:], [0]])
+    abar_prev = jnp.where(jnp.arange(K) < K - 1, sched.alpha_bars[nxt], 1.0)
+    sq_ab = jnp.sqrt(abar)
+    sq_abp = jnp.sqrt(abar_prev)
+    coef_x = sq_abp / sq_ab
+    coef_e = jnp.sqrt(1.0 - abar_prev) - sq_abp * jnp.sqrt(1.0 - abar) / sq_ab
+    coef_n = jnp.zeros((K,), sched.betas.dtype)
+    return coef_x, coef_e, coef_n, jnp.asarray(idx) + 1
+
+
+# ----------------------------------------------------------------------
+def chain_sample(denoiser_params, sched: DF.DiffusionSchedule, f_s, key,
+                 action_dim: int, *, kind: str = "ddpm",
+                 K: Optional[int] = None, impl: str = "auto",
+                 t_dim: int = 16):
+    """Action mean x_0 via the fused affine chain. Drop-in for
+    `diffusion.reverse_sample` (same key semantics: key -> (kx, kn), x_T
+    from kx, posterior noise from kn) with selectable schedule."""
+    if kind == "ddpm":
+        cx, ce, cn, t_in = ddpm_coeffs(sched)
+    elif kind == "ddim":
+        if K is None:
+            raise ValueError("kind='ddim' needs K")
+        cx, ce, cn, t_in = ddim_coeffs(sched, K)
+    else:
+        raise ValueError(f"chain kind must be ddpm|ddim, got {kind!r}")
+    Ks = int(t_in.shape[0])
+    batch_shape = f_s.shape[:-1]
+    kx, kn = jax.random.split(key)
+    x = jax.random.normal(kx, batch_shape + (action_dim,))
+    noises = (jax.random.normal(kn, (Ks,) + batch_shape + (action_dim,))
+              if kind == "ddpm"
+              else jnp.zeros((Ks,) + batch_shape + (action_dim,)))
+    tembs = DF.timestep_embedding(t_in, t_dim)
+    return KOPS.denoise_chain(denoiser_params, x, noises, f_s, tembs,
+                              cx, ce, cn, impl=impl)
+
+
+def distilled_sample(student_params, f_s, key, action_dim: int, T: int, *,
+                     impl: str = "auto", t_dim: int = 16):
+    """One student forward: x_0 = student(x_T, T, f_s), tanh-bounded.
+
+    Key semantics mirror `reverse_sample`: kd -> (kx, kn), x_T from kx (kn
+    unused), so the student consumes the exact x_T the teacher chain would
+    have started from — `training.distill` trains on that pairing."""
+    batch_shape = f_s.shape[:-1]
+    kx, _ = jax.random.split(key)
+    x = jax.random.normal(kx, batch_shape + (action_dim,))
+    i = jnp.full(batch_shape, T)
+    if KOPS.resolve_impl(impl) == "ref":
+        return DF.denoise_eps(student_params, x, i, f_s, t_dim)
+    return KOPS.denoise_eps_fused(student_params, x, i, f_s, t_dim)

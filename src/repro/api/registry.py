@@ -48,6 +48,11 @@ class ResolvedPolicy:
     trained: bool          # False iff a learned policy got fresh weights
     kind: str              # "baseline" | "learned" | "offline"
     meta: Dict[str, Any] = field(default_factory=dict)
+    #: the shared compiled-inference layer's view of this policy
+    #: (`repro.actors.ActorProgram`), attached by `resolve` — consumers
+    #: that need the per-decision program or the vmapped view take it from
+    #: here instead of re-deriving their own
+    program: Any = None
 
 
 _BUILDERS: Dict[str, Tuple[str, Callable]] = {}
@@ -86,7 +91,11 @@ def resolve(spec, ecfg: EV.EnvConfig, *,
         raise ValueError(f"unknown policy {spec.name!r}; "
                          f"choose from {available_policies()}")
     kind, builder = _BUILDERS[spec.name]
-    return builder(spec, ecfg, trace_fn)
+    rp = builder(spec, ecfg, trace_fn)
+    if rp.program is None:
+        from repro.actors.program import actor_program
+        rp.program = actor_program(ecfg, rp.policy)
+    return rp
 
 
 # ----------------------------------------------------------------------
@@ -129,19 +138,41 @@ def _build_greedy(spec, ecfg, trace_fn):
 
 @register("eat", LEARNED)
 def _build_eat(spec, ecfg, trace_fn):
+    from repro import actors as ACT
     from repro.core import agent as AG
-    from repro.core import sac as SAC
     acfg = spec.options.get("acfg")
     if acfg is None:
         kw = {k: spec.options[k] for k in ("variant", "T")
               if k in spec.options}
         acfg = AG.AgentConfig(**kw)
     deterministic = bool(spec.options.get("deterministic", True))
-    params, trained = _load_weights(
-        spec, lambda: AG.init_actor(jax.random.PRNGKey(spec.seed), ecfg, acfg))
+    # sampler selection is the one registry knob every consumer inherits:
+    # Simulator, StreamRunner, stream training and serving all receive the
+    # policy the actor layer builds for it (spec.sampler wins over the
+    # legacy options key)
+    sampler = ACT.normalize_sampler(
+        spec.sampler if spec.sampler is not None
+        else spec.options.get("sampler"))
+
+    def fresh():
+        p = AG.init_actor(jax.random.PRNGKey(spec.seed), ecfg, acfg)
+        if sampler == "distilled":
+            p["student"] = ACT.init_student(
+                jax.random.fold_in(jax.random.PRNGKey(spec.seed), 1),
+                ecfg, acfg)
+        return p
+
+    params, trained = _load_weights(spec, fresh)
+    if sampler == "distilled" and "student" not in params:
+        raise ValueError(
+            "sampler='distilled' needs params['student'] (a denoiser-shaped "
+            "head from repro.training.distill.distill_actor or "
+            "repro.actors.init_student); the given weights have none")
+    policy = ACT.actor_policy(ecfg, acfg, deterministic=deterministic,
+                              sampler=sampler)
     return ResolvedPolicy(
-        "eat", SAC.actor_policy(ecfg, acfg, deterministic=deterministic),
-        params, trained, LEARNED, {"variant": acfg.variant})
+        "eat", policy, params, trained, LEARNED,
+        {"variant": acfg.variant, "sampler": sampler})
 
 
 @register("ppo", LEARNED)

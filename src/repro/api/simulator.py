@@ -136,6 +136,8 @@ class Simulator:
                 else:
                     res = self._run_streaming(rp, key)
             res.wall_s = time.perf_counter() - t0
+            if rp.meta.get("sampler"):
+                res.summary["sampler"] = str(rp.meta["sampler"])
             if tcfg.enabled and tcfg.profile_decisions:
                 with self.tracer.span("profile_decisions", cat="profile",
                                       policy=rp.name):
@@ -147,8 +149,11 @@ class Simulator:
         return res
 
     def _labels(self, rp: REG.ResolvedPolicy) -> Dict[str, str]:
-        return {"policy": rp.name, "backend": self.exec_spec.backend,
-                "mode": self.workload.mode, "cell": self.scenario.name}
+        out = {"policy": rp.name, "backend": self.exec_spec.backend,
+               "mode": self.workload.mode, "cell": self.scenario.name}
+        if rp.meta.get("sampler"):        # diffusion actors: metric rows
+            out["sampler"] = str(rp.meta["sampler"])   # split per sampler
+        return out
 
     def _flush_telemetry(self) -> None:
         """Rewrite the trace file and (when configured) the metrics

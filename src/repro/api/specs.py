@@ -46,12 +46,20 @@ class PolicySpec:
     so sweep summaries cannot pass off an untrained agent as the paper's.
     `options` feeds the registry builder (e.g. ``{"acfg": AgentConfig(...)}``
     for "eat", ``{"seq_len": 512}`` for the offline meta-heuristics).
+
+    `sampler` selects how a diffusion actor turns its denoiser into an
+    action mean (``"ddpm"`` — the full T-step chain, the default —
+    ``"ddim:K"`` strided deterministic sampling, or ``"distilled"`` — the
+    one-call student head trained by `training.distill`; see
+    `repro.actors`). Ignored by non-diffusion policies only in the sense
+    that they reject anything but the default. ``None`` means "ddpm".
     """
     name: str
     checkpoint: Optional[str] = None
     params: Any = None
     seed: int = 0
     options: Mapping[str, Any] = field(default_factory=dict)
+    sampler: Optional[str] = None
 
 
 @dataclass(frozen=True, eq=False)

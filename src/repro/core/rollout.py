@@ -136,7 +136,10 @@ def _batch_rollout_fused(ecfg: EV.EnvConfig, traces: Dict, policy: Policy,
     statics = jax.vmap(lambda tr: EV.decision_statics(ecfg, tr))(traces)
     q0, obs0 = jax.vmap(
         lambda tr, st: EV.reset_view(ecfg, tr, st))(traces, state0)
-    vpolicy = jax.vmap(policy, in_axes=(None, 0, 0, 0, 0))
+    # the batch-axis policy view comes from the shared actor layer — one
+    # cached vmap per (ecfg, policy) instead of a fresh closure per trace
+    from repro.actors.program import actor_program
+    vpolicy = actor_program(ecfg, policy).vmapped
 
     def body(carry, _):
         state, q, obs, ks, done, total, length = carry

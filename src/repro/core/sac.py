@@ -159,18 +159,21 @@ def policy_act(actor_params, obs, key, *, ecfg: EV.EnvConfig,
 
 # ----------------------------------------------------------------------
 # rollout-engine policies (cached: the callable is a static jit argument)
-@functools.lru_cache(maxsize=None)
 def actor_policy(ecfg: EV.EnvConfig, acfg: AG.AgentConfig,
                  deterministic: bool = False):
     """Diffusion/Gaussian actor as a batch_rollout policy; actor weights are
-    the traced `params`, so training updates never trigger a recompile."""
-    sched = DF.vp_schedule(acfg.T)
+    the traced `params`, so training updates never trigger a recompile.
 
-    def policy(params, key, trace, state, obs):
-        a, _, _, _ = AG.actor_sample(params, acfg, ecfg, sched, obs, key,
-                                     deterministic=deterministic)
-        return AG.to_env_action(a), {"agent_action": a}
-    return policy
+    Thin delegate to the unified actor layer (`repro.actors.actor_policy`
+    with the default full-chain ``sampler="ddpm"``) — the SAME cached
+    callable object, so jit-program caches keyed on policy identity keep
+    hitting across both doors. Kept (without a deprecation warning: the
+    trainers and benchmarks still route through it) as the historical
+    door; new consumers should import `repro.actors`.
+    """
+    from repro.actors import actor_policy as _actor_policy
+    return _actor_policy(ecfg, acfg, deterministic=deterministic,
+                         sampler="ddpm")
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,10 +1,24 @@
-"""Pure-jnp oracle: matches repro.core.diffusion.denoise_eps given the same
-flattened weights."""
+"""Pure-jnp oracles for the fused denoiser kernels.
+
+`denoiser_ref` matches one `repro.core.diffusion.denoise_eps` forward given
+the same flattened weights. `denoiser_chain_ref` is the whole-chain oracle:
+K affine reverse-diffusion steps (x <- c_x x + c_e eps + c_n noise) with the
+eps-MLP inside the loop, finished by the tanh action bound. It doubles as
+the CPU fast path of `ops.denoise_chain` — exactly the env-step idiom where
+`ref.py` is both the parity oracle and the production implementation off
+accelerators.
+
+The affine update is `_pin`-armored (`env._pin`): each product is pinned
+before the sum so LLVM cannot contract a context-dependent subset of the
+multiply-adds into FMAs, which would break bitwise kernel-vs-oracle parity
+in pallas interpret mode.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.env import _pin
 from repro.models.layers import mish
 
 
@@ -12,3 +26,31 @@ def denoiser_ref(inp, w1, b1, w2, b2, w3, b3):
     h = mish(inp @ w1 + b1)
     h = mish(h @ w2 + b2)
     return jnp.tanh(h @ w3 + b3)
+
+
+def denoiser_chain_ref(x, noises, f_s, tembs, coef_x, coef_e, coef_n,
+                       w1, b1, w2, b2, w3, b3):
+    """Run the K-step reverse chain. Shapes:
+
+        x       (..., A)      initial x_K ~ N(0, I)
+        noises  (K, ..., A)   per-step posterior noise (zeros for DDIM)
+        f_s     (..., F)      state feature, constant across steps
+        tembs   (K, t_dim)    per-step timestep embeddings
+        coef_*  (K,)          affine chain coefficients
+
+    Returns tanh(x_0), (..., A). The step order is j = 0..K-1 (step j
+    denoises timestep index K-1-j; the coefficient builders in
+    `repro.actors.samplers` encode the schedule).
+    """
+    K = tembs.shape[0]
+    t_shape = x.shape[:-1] + (tembs.shape[-1],)
+
+    def body(j, x):
+        t_b = jnp.broadcast_to(tembs[j], t_shape)
+        inp = jnp.concatenate([x, t_b, f_s], axis=-1)
+        eps = denoiser_ref(inp, w1, b1, w2, b2, w3, b3)
+        return (_pin(coef_x[j] * x) + _pin(coef_e[j] * eps)
+                + _pin(coef_n[j] * noises[j]))
+
+    x0 = jax.lax.fori_loop(0, K, body, x, unroll=True)
+    return jnp.tanh(x0)

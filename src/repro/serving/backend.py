@@ -40,12 +40,14 @@ from __future__ import annotations
 
 import functools
 import time
+import warnings
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.actors.program import actor_program
 from repro.common.config import ASSIGNED_ARCHS
 from repro.core import env as EV
 from repro.core import obs as OBS
@@ -58,23 +60,18 @@ from repro.telemetry.profile import DecisionProfile
 from repro.telemetry.trace import NULL_TRACER, tracer_for
 
 
-@functools.lru_cache(maxsize=None)
 def _policy_prog(ecfg: EV.EnvConfig, policy):
-    """Policy inference alone, one jitted program per (ecfg, policy): the
-    key split + actor forward of one `rollout_episode` scan iteration.
-    Splitting it from the env advance (`_env_prog`) puts a jit boundary
-    exactly at the decision seam, so the host can wall-clock *inference*
-    latency per decision — the quantity `BENCH_decision_latency.json`
-    tracks — separately from env-advance time. The env's FMA/reciprocal
-    bitwise armor makes the split value-preserving: the two-program
-    decision reproduces the fused simulator bit-for-bit
-    (tests/test_serving_backend.py)."""
-    @jax.jit
-    def act(trace, state, obs, key, params):
-        key, k_act = jax.random.split(key)
-        action, extras = policy(params, k_act, trace, state, obs)
-        return key, action, extras
-    return act
+    """DEPRECATED door: the per-decision inference program now lives on the
+    shared actor layer — use ``repro.actors.actor_program(ecfg,
+    policy).act``. This wrapper returns exactly that program (same compiled
+    executable, same (key split + actor forward) semantics, same bitwise
+    guarantees vs the fused simulator) and will be removed once external
+    callers migrate."""
+    warnings.warn(
+        "serving.backend._policy_prog is deprecated; use "
+        "repro.actors.actor_program(ecfg, policy).act",
+        DeprecationWarning, stacklevel=2)
+    return actor_program(ecfg, policy).act
 
 
 @functools.lru_cache(maxsize=None)
@@ -370,7 +367,13 @@ class ServingRollout:
         state = (EV.reset(ecfg) if init_state is None
                  else jax.tree_util.tree_map(lambda x: x[0], init_state))
         q, obs = EV.reset_view(ecfg, trace, state)
-        act = _policy_prog(ecfg, policy)
+        # the shared actor layer owns the per-decision inference program:
+        # the jit boundary at the decision seam (key split + actor forward)
+        # is the SAME compiled program the latency probe measures, and its
+        # sampler label attributes every decision span
+        prog = actor_program(ecfg, policy)
+        act = prog.act
+        sampler = prog.sampler
         env_step = _env_prog(ecfg)
         wall_patch = _wall_patch_prog(ecfg)
         tr = self.tracer
@@ -379,9 +382,12 @@ class ServingRollout:
         total = np.float32(0.0)
         length = 0
         rows = [] if collect else None
+        # per-sampler self-time attribution in the span table
+        # (scripts/trace_summary.py groups decision spans by this attr)
+        dkw = {"sampler": sampler} if sampler else {}
         for t_i in range(T):
             t0 = time.perf_counter()
-            with tr.span("decision", cat="serving", step=t_i):
+            with tr.span("decision", cat="serving", step=t_i, **dkw):
                 key, action, extras = act(trace, state, obs, key, params)
                 jax.block_until_ready(action)
             self.profile.observe("policy", time.perf_counter() - t0)

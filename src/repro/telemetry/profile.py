@@ -72,16 +72,29 @@ class DecisionProfile:
 
 # ----------------------------------------------------------------------
 def profile_policy(ecfg, policy, params, key, *, trace=None, state=None,
-                   iters: int = 50, warmup: int = 2) -> Dict[str, float]:
+                   iters: int = 50, warmup: int = 2,
+                   batch: int = 0) -> Dict[str, float]:
     """Wall-clock `iters` single decisions of one rollout-protocol policy.
 
-    The probe jits `policy(params, key, trace, state, obs)` alone — no env
-    step, no executor — so the number is pure inference latency at the
-    host's jit boundary, the cost a line-rate scheduler pays per arriving
-    task. Returns `decision_latency_{p50,p95,p99,mean}_s` (+ `_n`).
+    The probe runs the shared actor layer's per-decision program
+    (`repro.actors.actor_program(ecfg, policy).act` — the key split +
+    actor forward at the serving backend's jit boundary), so the measured
+    executable is literally the one a serving decision pays per arriving
+    task. No env step, no executor. Returns
+    `decision_latency_{p50,p95,p99,mean}_s` (+ `_n`, + `sampler` when the
+    policy carries a sampler label).
+
+    ``batch > 0`` measures the batched view instead — the `vmapped`
+    program the fused rollout scan pays per decision step across `batch`
+    envs (trace/state/obs broadcast). Single-decision timings on small
+    nets are floored by host dispatch; the batched probe is where a
+    cheaper sampler's compute saving is visible, so latency gates compare
+    samplers at batch scale.
     """
     import jax
+    import jax.numpy as jnp
 
+    from repro.actors.program import actor_program
     from repro.core import env as EV
     from repro.core.workload import TraceConfig, make_trace
 
@@ -94,24 +107,40 @@ def profile_policy(ecfg, policy, params, key, *, trace=None, state=None,
         state = EV.reset(ecfg)
     _, obs = EV.reset_view(ecfg, trace, state)
 
-    prog = jax.jit(lambda p, k: policy(p, k, trace, state, obs)[0])
-    jax.block_until_ready(prog(params, key))          # compile
+    aprog = actor_program(ecfg, policy)
+    if batch > 0:
+        bcast = lambda t: jax.tree_util.tree_map(  # noqa: E731
+            lambda x: jnp.broadcast_to(x, (batch,) + jnp.shape(x)), t)
+        btrace, bstate = bcast(trace), bcast(state)
+        bobs = jnp.broadcast_to(obs, (batch,) + obs.shape)
+        vp = jax.jit(aprog.vmapped)
+
+        def run(p, k):
+            return vp(p, jax.random.split(k, batch), btrace, bstate, bobs)[0]
+    else:
+        run = lambda p, k: aprog.act(trace, state, obs, k, p)[1]  # noqa: E731
+    jax.block_until_ready(run(params, key))          # compile
     for _ in range(warmup):
-        jax.block_until_ready(prog(params, key))
+        jax.block_until_ready(run(params, key))
 
     hist = LatencyHistogram(DECISION_EDGES)
     total = 0.0
     for i in range(iters):
         k = jax.random.fold_in(key, i)
         t0 = time.perf_counter()
-        jax.block_until_ready(prog(params, k))
+        jax.block_until_ready(run(params, k))
         dt = time.perf_counter() - t0
         hist.add_values([dt])
         total += dt
-    return {
+    out = {
         "decision_latency_p50_s": hist.percentile(0.50),
         "decision_latency_p95_s": hist.percentile(0.95),
         "decision_latency_p99_s": hist.percentile(0.99),
         "decision_latency_mean_s": total / max(iters, 1),
         "decision_latency_n": float(iters),
     }
+    if batch > 0:
+        out["decision_batch"] = float(batch)
+    if aprog.sampler:
+        out["sampler"] = aprog.sampler
+    return out

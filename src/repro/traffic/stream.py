@@ -347,7 +347,8 @@ class StreamRunner:
         if not 0 <= max_carry < K:
             raise ValueError(f"max_carry must be in [0, {K}), got {max_carry}")
         self.ecfg, self.scfg = ecfg, scfg
-        self.policy, self.params = policy, params
+        self.params = params
+        self._set_policy(policy)
         self.source, self.key = source, key
         self.rollout_fn = rollout_fn
         self.tracer = NULL_TRACER if tracer is None else tracer
@@ -389,6 +390,18 @@ class StreamRunner:
             # per-model scheduled/reload tallies (cold-start-rate labels)
             self._pm_sched = np.zeros(ecfg.num_models, np.float64)
             self._pm_reload = np.zeros(ecfg.num_models, np.float64)
+
+    # ------------------------------------------------------------------
+    def _set_policy(self, policy) -> None:
+        """Register the current policy with the shared actor layer: the
+        seam swap (`run_window(policy=...)`) re-resolves the cached
+        `ActorProgram`, so per-window policy changes (warmup -> actor,
+        sampler swaps) reuse compiled programs instead of re-deriving
+        callables — and the program's sampler label feeds the window
+        span."""
+        from repro.actors.program import actor_program
+        self.policy = policy
+        self.program = actor_program(self.ecfg, policy)
 
     # ------------------------------------------------------------------
     def _build_window(self):
@@ -449,15 +462,17 @@ class StreamRunner:
         given, replace the runner's current ones from this window on (the
         trainers push freshly-updated actor weights each round)."""
         if policy is not None:
-            self.policy = policy
+            self._set_policy(policy)
         if params is not None:
             self.params = params
         w = self.window
         tr = self.tracer
+        wkw = ({"sampler": self.program.sampler}
+               if self.program.sampler else {})
         wspan = tr.span("window", cat="stream", window=w,
                         backend=getattr(self.rollout_fn, "backend",
                                         "fused" if self.scfg.fused
-                                        else "reference"))
+                                        else "reference"), **wkw)
         with wspan:
             with tr.span("build_window", cat="stream", window=w):
                 (cols, n_injected, n_dropped, n_carried,

@@ -1,0 +1,191 @@
+"""Consistency distillation of the diffusion actor: the T-step teacher
+chain compressed into one student forward pass.
+
+The EAT actor pays T denoiser calls per scheduling decision; the chain is
+a deterministic map (x_T, f_s) -> x_0 once its PRNG path is fixed.
+Following the consistency-model recipe ("Accelerating AIGC Services with
+Latent Action Diffusion Scheduling in Edge Networks", PAPERS.md), we train
+a denoiser-shaped student g(x_T, T, f_s) to regress the FROZEN teacher
+chain's output on the exact (x_T, f_s) pairing inference will see:
+
+* observations come from rolling the teacher policy itself (so the state
+  distribution matches deployment — `collect_obs`);
+* the teacher target is the DETERMINISTIC probability-flow chain — the
+  full-grid DDIM (eta = 0, K = T) run of the same denoiser
+  (`actors.samplers.chain_sample(kind="ddim", K=T)`). The stochastic DDPM
+  chain injects fresh posterior noise at every step, which no one-call
+  student can reproduce (the regression would bottom out at the chain's
+  conditional variance); the PF-ODE endpoint is a deterministic function
+  of (x_T, f_s), so the student can fit it arbitrarily well;
+* per sample, a decision-level chain key `kd` fixes both the teacher's
+  x_T and the student's (the same ``split(kd)[0]`` draw —
+  `actors.samplers.distilled_sample` replays it at inference), so a
+  perfectly-distilled student is action-identical to the deterministic
+  DDIM teacher on every decision key;
+* plain MSE on tanh-bounded x_0, Adam on the student only — encoder and
+  sigma head are shared with (copied from) the teacher, so f_s and the
+  exploration head are untouched.
+
+    params2, hist = distill_actor(key, teacher_params, ecfg, acfg)
+    rp = resolve(PolicySpec("eat", params=params2, sampler="distilled"), ecfg)
+
+The returned params dict is the teacher's plus ``"student"`` — exactly
+what ``PolicySpec("eat", sampler="distilled")`` expects.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.actors import samplers as SMP
+from repro.actors.policies import actor_policy, init_student
+from repro.core import agent as AG
+from repro.core import diffusion as DF
+from repro.core import env as EV
+from repro.core import rollout as RO
+from repro.core.workload import TraceConfig, make_trace
+from repro.training.optimizer import (adam_init, adam_update, apply_updates)
+
+
+@dataclass(frozen=True)
+class DistillConfig:
+    steps: int = 400              # gradient steps
+    batch: int = 256              # samples per step
+    lr: float = 1e-3
+    dataset: int = 4096           # (obs, kd) pairs distilled over
+    noise_per_obs: int = 4        # fresh x_T draws per collected obs
+    collect_episodes: int = 8     # teacher rollouts that supply the obs
+    collect_steps: Optional[int] = None   # decision budget per rollout
+    log_every: int = 0
+
+    def __post_init__(self):
+        if self.steps < 1:
+            raise ValueError(f"steps must be >= 1, got {self.steps}")
+        if self.dataset < 1 or self.batch < 1:
+            raise ValueError("dataset and batch must be >= 1")
+
+
+def collect_obs(key, teacher_params, ecfg: EV.EnvConfig,
+                acfg: AG.AgentConfig, episodes: int = 8,
+                num_steps: Optional[int] = None) -> jnp.ndarray:
+    """Observations from the teacher's own induced state distribution:
+    `episodes` deterministic teacher rollouts, valid steps only, flattened
+    to (N, 3, E+l)."""
+    k_tr, k_run = jax.random.split(key)
+    tcfg = TraceConfig(num_tasks=ecfg.max_tasks, max_servers=ecfg.num_servers,
+                       num_models=ecfg.num_models)
+    traces = jax.vmap(lambda k: make_trace(k, tcfg))(
+        jax.random.split(k_tr, episodes))
+    policy = actor_policy(ecfg, acfg, deterministic=True, sampler="ddpm")
+    res = RO.batch_rollout(ecfg, traces, policy, teacher_params,
+                           jax.random.split(k_run, episodes),
+                           num_steps=num_steps, collect=True)
+    tr = res.transitions
+    valid = np.asarray(tr.valid).reshape(-1)
+    obs = np.asarray(tr.obs).reshape((-1,) + tr.obs.shape[2:])[valid]
+    return jnp.asarray(obs)
+
+
+@functools.partial(jax.jit, static_argnames=("ecfg", "acfg"))
+def _teacher_targets(teacher_params, obs, kds, *, ecfg: EV.EnvConfig,
+                     acfg: AG.AgentConfig):
+    """Frozen-teacher supervision for a batch of (obs, chain key) pairs:
+    f_s, the deterministic full-grid DDIM chain's x_0 (the PF-ODE
+    endpoint), and the student's input x_T (the chain's own first draw —
+    `chain_sample`'s kx)."""
+    sched = DF.vp_schedule(acfg.T)
+
+    def one(o, kd):
+        f_s = AG._encode(teacher_params, acfg, ecfg, o)
+        x0 = SMP.chain_sample(teacher_params["denoiser"], sched, f_s, kd,
+                              ecfg.action_dim, kind="ddim", K=acfg.T,
+                              impl="ref")
+        kx, _ = jax.random.split(kd)
+        x_T = jax.random.normal(kx, (ecfg.action_dim,))
+        return f_s, x0, x_T
+
+    return jax.vmap(one)(obs, kds)
+
+
+@functools.partial(jax.jit, static_argnames=("acfg", "lr"))
+def _student_step(student, opt, f_s, x0, x_T, *, acfg: AG.AgentConfig,
+                  lr: float):
+    T = acfg.T
+
+    def loss_fn(sp):
+        pred = DF.denoise_eps(sp, x_T, jnp.full(x_T.shape[:-1], T), f_s)
+        return jnp.mean(jnp.square(pred - x0))
+
+    loss, grads = jax.value_and_grad(loss_fn)(student)
+    upd, opt = adam_update(grads, opt, student, lr)
+    return apply_updates(student, upd), opt, loss
+
+
+def distill_actor(key, teacher_params, ecfg: EV.EnvConfig,
+                  acfg: AG.AgentConfig,
+                  dcfg: DistillConfig = DistillConfig(), *,
+                  obs: Optional[jnp.ndarray] = None, tracer=None
+                  ) -> Tuple[Dict, List[Dict]]:
+    """Distill the frozen teacher chain into a one-call student head.
+
+    Returns (params, history): `params` is the teacher dict plus the
+    trained ``"student"``; `history` rows carry (step, loss). `obs`
+    overrides the self-collected observation set (any (N, 3, E+l) array).
+    """
+    if acfg.policy != "diffusion":
+        raise ValueError(
+            f"distillation needs a diffusion teacher; variant "
+            f"{acfg.variant!r} is Gaussian")
+    k_obs, k_data, k_init, k_train = jax.random.split(key, 4)
+    if obs is None:
+        obs = collect_obs(k_obs, teacher_params, ecfg, acfg,
+                          episodes=dcfg.collect_episodes,
+                          num_steps=dcfg.collect_steps)
+    n_obs = int(obs.shape[0])
+    if n_obs == 0:
+        raise ValueError("no observations to distill over")
+
+    # dataset: sample obs rows, one fresh chain key per (obs, draw) pair
+    n = min(dcfg.dataset, n_obs * dcfg.noise_per_obs)
+    ko, kk = jax.random.split(k_data)
+    rows = jax.random.randint(ko, (n,), 0, n_obs)
+    kds = jax.vmap(jax.random.fold_in, (None, 0))(kk, jnp.arange(n))
+    f_s, x0, x_T = _teacher_targets(teacher_params, obs[rows], kds,
+                                    ecfg=ecfg, acfg=acfg)
+
+    student = init_student(k_init, ecfg, acfg)
+    opt = adam_init(student)
+    history: List[Dict] = []
+    span = (tracer.span if tracer is not None
+            else (lambda *a, **k: _NULL_SPAN))
+    with span("distill", cat="train", steps=dcfg.steps, samples=n):
+        for s in range(dcfg.steps):
+            kb = jax.random.fold_in(k_train, s)
+            idx = jax.random.randint(kb, (min(dcfg.batch, n),), 0, n)
+            student, opt, loss = _student_step(
+                student, opt, f_s[idx], x0[idx], x_T[idx], acfg=acfg,
+                lr=dcfg.lr)
+            if dcfg.log_every and s % dcfg.log_every == 0:
+                row = {"step": s, "loss": float(loss)}
+                history.append(row)
+                print(f"[distill {s:4d}] loss={row['loss']:.5f}")
+    history.append({"step": dcfg.steps - 1, "loss": float(loss)})
+    out = dict(teacher_params)
+    out["student"] = student
+    return out, history
+
+
+class _Null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+_NULL_SPAN = _Null()

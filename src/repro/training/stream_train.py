@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import actors as ACT
 from repro.core import agent as AG
 from repro.core import env as EV
 from repro.core import ppo as PPO
@@ -81,8 +82,20 @@ class StreamTrainConfig:
     chunk_size: int = 0
     max_updates_per_round: Optional[int] = None
     log_every: int = 0
+    #: collection-time sampler for the SAC diffusion actor ("ddpm" — the
+    #: default, bitwise-identical to the historical trainer — or "ddim:K"
+    #: for cheaper per-decision inference during collection; resolved
+    #: through the shared actor layer. "distilled" is rejected: the student
+    #: head does not exist in a TrainState mid-training.
+    sampler: str = "ddpm"
 
     def __post_init__(self):
+        from repro.actors import normalize_sampler
+        if normalize_sampler(self.sampler) == "distilled":
+            raise ValueError(
+                "stream training collects with the online actor; "
+                "sampler='distilled' needs a student head that only exists "
+                "after training (use ddpm or ddim:K)")
         if self.rounds < 0:
             raise ValueError(f"rounds must be >= 0, got {self.rounds}")
         if self.windows_per_round < 1:
@@ -237,7 +250,8 @@ def train_stream_sac(ecfg: EV.EnvConfig, acfg: AG.AgentConfig,
         source.set_cell(ci)
         warmup = buffer.size < scfg.warmup_steps
         policy = (SAC.warmup_policy(ecfg) if warmup
-                  else SAC.actor_policy(ecfg, acfg))
+                  else ACT.actor_policy(ecfg, acfg,
+                                        sampler=stcfg.sampler))
         params = {} if warmup else ts.actor
         ragg = MX.StreamAggregator(ecfg.num_servers, ecfg.q_min,
                                    stcfg.resp_sla)

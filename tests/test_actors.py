@@ -1,0 +1,349 @@
+"""The unified actor layer (`repro.actors`): fused K-step denoiser chain
+parity vs the ref oracle, the DDIM / distilled fast samplers, ActorProgram
+caching and the migrated consumer doors, registry sampler plumbing, and
+consistency distillation (`training.distill`)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro import actors as ACT
+from repro.actors import samplers as SMP
+from repro.core import agent as AG
+from repro.core import diffusion as DF
+from repro.core import sac as SAC
+from repro.core import scenarios as SC
+from repro.core.env import EnvConfig
+from repro.core.workload import TraceConfig
+from repro.kernels.denoiser import ops as KOPS
+from repro.kernels.denoiser import ref as KREF
+
+ECFG = EnvConfig(num_servers=4, max_tasks=8, queue_window=4, max_steps=24)
+TCFG = TraceConfig(num_tasks=8, arrival_rate=0.05, max_servers=4)
+CELL = SC.Scenario(name="actors-test-cell", ecfg=ECFG, tcfg=TCFG)
+# mlp encoder + diffusion policy: the cheapest variant with a denoiser
+ACFG = AG.AgentConfig(variant="eat-a", T=4, hidden=32)
+
+
+def _chain_inputs(key, B, A, F, K, t_dim=16):
+    ks = jax.random.split(key, 8)
+    p = DF.init_denoiser(ks[0], A, F, hidden=24)
+    x = jax.random.normal(ks[1], (B, A))
+    noises = jax.random.normal(ks[2], (K, B, A))
+    f_s = jax.random.normal(ks[3], (B, F))
+    tembs = DF.timestep_embedding(jnp.arange(K) + 1, t_dim)
+    cx = 1.0 + 0.1 * jax.random.normal(ks[4], (K,))
+    ce = 0.1 * jax.random.normal(ks[5], (K,))
+    cn = 0.1 * jax.random.uniform(ks[6], (K,))
+    return p, x, noises, f_s, tembs, cx, ce, cn
+
+
+# ------------------------------------------------------------ chain kernel
+@pytest.mark.parametrize("B,A,F,K", [
+    (9, 3, 12, 10),
+    (5, 5, 7, 5),
+    (4, 4, 20, 1),
+    (130, 3, 12, 4),   # batch spills over one 128-row block
+])
+def test_chain_kernel_bitwise_vs_ref_oracle(B, A, F, K):
+    """Pallas whole-chain kernel (interpret mode) is BITWISE against the
+    jnp chain oracle — the _pin armor blocks FMA contraction."""
+    p, x, noises, f_s, tembs, cx, ce, cn = _chain_inputs(
+        jax.random.PRNGKey(K * 131 + A), B, A, F, K)
+    ref = KOPS.denoise_chain(p, x, noises, f_s, tembs, cx, ce, cn,
+                             impl="ref")
+    ker = KOPS.denoise_chain(p, x, noises, f_s, tembs, cx, ce, cn,
+                             impl="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(ker))
+
+
+def test_chain_ref_single_step_matches_denoiser_ref():
+    """K=1, cx=0, ce=1, cn=0 reduces the chain to tanh of one eps call."""
+    p, x, noises, f_s, tembs, *_ = _chain_inputs(
+        jax.random.PRNGKey(7), 6, 3, 10, 1)
+    w = [(l["w"], l["b"]) for l in p["layers"]]
+    inp = jnp.concatenate([x, jnp.broadcast_to(tembs[0], (6, 16)), f_s], -1)
+    eps = KREF.denoiser_ref(inp, *w[0], *w[1], *w[2])
+    out = KREF.denoiser_chain_ref(
+        x, noises, f_s, tembs, jnp.zeros((1,)), jnp.ones((1,)),
+        jnp.zeros((1,)), *w[0], *w[1], *w[2])
+    # allclose, not bitwise: the standalone eps call compiles in a separate
+    # XLA program whose fusion choices may differ at the ulp level
+    np.testing.assert_allclose(np.asarray(out), np.tanh(np.asarray(eps)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_chain_with_ddpm_coeffs_matches_reverse_sample():
+    """The affine-chain DDPM path reproduces `diffusion.reverse_sample`
+    on the same PRNG path (allclose — the coefficient algebra is
+    refactored, not transcribed)."""
+    T, A, F = 6, 3, 12
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    p = DF.init_denoiser(ks[0], A, F, hidden=24)
+    sched = DF.vp_schedule(T)
+    f_s = jax.random.normal(ks[1], (F,))
+    want = DF.reverse_sample(p, sched, f_s, ks[2], A)
+    got = SMP.chain_sample(p, sched, f_s, ks[2], A, kind="ddpm", impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_denoise_eps_fused_rejects_wrong_layer_count():
+    """Regression: the fused op used to silently index layers[0..2] —
+    non-3-layer denoisers must fail loudly, not compute garbage."""
+    A, F = 3, 8
+    p3 = DF.init_denoiser(jax.random.PRNGKey(0), A, F, hidden=16)
+    x = jnp.zeros((2, A))
+    i = jnp.full((2,), 4)
+    f_s = jnp.zeros((2, F))
+    for n in (2, 4):
+        bad = {"layers": (p3["layers"] * 2)[:n]}
+        with pytest.raises(ValueError, match="exactly 3 MLP layers"):
+            KOPS.denoise_eps_fused(bad, x, i, f_s)
+    with pytest.raises(ValueError, match="layers"):
+        KOPS.denoise_eps_fused({"w": jnp.zeros(())}, x, i, f_s)
+    # the chain executor validates through the same door
+    with pytest.raises(ValueError, match="exactly 3 MLP layers"):
+        KOPS.denoise_chain({"layers": p3["layers"][:2]}, x,
+                           jnp.zeros((1, 2, A)), f_s,
+                           DF.timestep_embedding(jnp.array([1]), 16),
+                           jnp.ones((1,)), jnp.ones((1,)), jnp.zeros((1,)))
+
+
+# ------------------------------------------------------------ samplers
+def test_parse_and_normalize_sampler():
+    assert SMP.parse_sampler(None) == ("ddpm", None)
+    assert SMP.parse_sampler("ddpm") == ("ddpm", None)
+    assert SMP.parse_sampler("ddim:5") == ("ddim", 5)
+    assert SMP.parse_sampler("DDIM:3") == ("ddim", 3)
+    assert SMP.parse_sampler("distilled") == ("distilled", None)
+    assert SMP.normalize_sampler(None) == "ddpm"
+    assert SMP.normalize_sampler("ddim:7") == "ddim:7"
+    for bad in ("ddim", "ddim:x", "ddim:0", "euler"):
+        with pytest.raises(ValueError):
+            SMP.parse_sampler(bad)
+
+
+def test_ddim_taus_strided_and_monotone():
+    for T, K in [(10, 1), (10, 5), (10, 10), (7, 3), (100, 4)]:
+        taus = SMP.ddim_taus(T, K)
+        assert taus.shape == (K,)
+        assert taus[0] == T - 1
+        if K > 1:
+            assert taus[-1] == 0
+            assert (np.diff(taus) < 0).all()
+    with pytest.raises(ValueError):
+        SMP.ddim_taus(5, 6)
+
+
+def test_ddim_full_grid_matches_probability_flow():
+    """K=T DDIM visits every timestep; coefficients are finite and the
+    terminal step maps x0_pred through exactly (coef_n == 0 throughout)."""
+    sched = DF.vp_schedule(8)
+    cx, ce, cn, t_in = SMP.ddim_coeffs(sched, 8)
+    assert np.asarray(t_in).tolist() == list(range(8, 0, -1))
+    np.testing.assert_array_equal(np.asarray(cn), 0.0)
+    assert np.isfinite(np.asarray(cx)).all()
+    assert np.isfinite(np.asarray(ce)).all()
+    # last step: abar_prev = 1 -> coef_x = 1/sqrt(abar_0)
+    np.testing.assert_allclose(
+        np.asarray(cx)[-1], 1.0 / np.sqrt(np.asarray(sched.alpha_bars)[0]),
+        rtol=1e-6)
+
+
+def test_gaussian_variant_rejects_fast_samplers():
+    gcfg = AG.AgentConfig(variant="eat-da", T=4)
+    with pytest.raises(ValueError, match="Gaussian"):
+        ACT.actor_policy(ECFG, gcfg, sampler="ddim:2")
+    with pytest.raises(ValueError, match="Gaussian"):
+        ACT.actor_policy(ECFG, gcfg, sampler="distilled")
+    # default ddpm label is fine on Gaussian variants (it routes to
+    # actor_sample, which handles both policy families)
+    assert ACT.actor_policy(ECFG, gcfg).sampler == "ddpm"
+
+
+# ------------------------------------------------------------ actor layer
+def test_sac_actor_policy_is_the_actors_door():
+    """The historical door returns the SAME cached callable object — jit
+    caches keyed on policy identity keep hitting across both imports."""
+    a = SAC.actor_policy(ECFG, ACFG)
+    b = ACT.actor_policy(ECFG, ACFG, sampler="ddpm")
+    c = ACT.actor_policy(ECFG, ACFG)
+    assert a is b is c
+    assert a.sampler == "ddpm"
+    det = SAC.actor_policy(ECFG, ACFG, deterministic=True)
+    assert det is ACT.actor_policy(ECFG, ACFG, deterministic=True)
+    assert det is not a
+
+
+def test_actor_program_cached_and_samples():
+    policy = ACT.actor_policy(ECFG, ACFG, deterministic=True)
+    prog = ACT.actor_program(ECFG, policy)
+    assert prog is ACT.actor_program(ECFG, policy)
+    assert prog.sampler == "ddpm"
+    assert prog.policy is policy
+
+    from repro.core import env as EV
+    from repro.core.workload import make_trace
+    params = AG.init_actor(jax.random.PRNGKey(0), ECFG, ACFG)
+    trace = make_trace(jax.random.PRNGKey(1), TCFG)
+    state = EV.reset(ECFG)
+    obs = EV.observe(ECFG, trace, state)
+    key = jax.random.PRNGKey(2)
+    key2, action, extras = prog.act(trace, state, obs, key, params)
+    assert "agent_action" in extras
+    # the seam splits the carried key exactly once
+    np.testing.assert_array_equal(np.asarray(key2),
+                                  np.asarray(jax.random.split(key)[0]))
+
+
+def test_policy_prog_door_is_deprecated():
+    from repro.serving import backend as SB
+    policy = ACT.actor_policy(ECFG, ACFG, deterministic=True)
+    with pytest.warns(DeprecationWarning, match="actor_program"):
+        act = SB._policy_prog(ECFG, policy)
+    # bound methods compare equal iff same function on the same program
+    assert act == ACT.actor_program(ECFG, policy).act
+
+
+# ------------------------------------------------------------ registry
+def _eat_spec(sampler=None, **opts):
+    opts.setdefault("acfg", ACFG)
+    return api.PolicySpec("eat", options=opts, sampler=sampler)
+
+
+def _resolve_quiet(spec):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", api.UntrainedPolicyWarning)
+        return api.resolve(spec, ECFG)
+
+
+def test_registry_plumbs_sampler_and_program():
+    for sampler, want in [(None, "ddpm"), ("ddim:2", "ddim:2"),
+                          ("distilled", "distilled")]:
+        rp = _resolve_quiet(_eat_spec(sampler))
+        assert rp.meta["sampler"] == want
+        assert rp.policy.sampler == want
+        assert rp.program is ACT.actor_program(ECFG, rp.policy)
+        assert rp.program.sampler == want
+    # legacy options key still works; spec.sampler wins over it
+    rp = _resolve_quiet(api.PolicySpec(
+        "eat", options={"acfg": ACFG, "sampler": "ddim:2"}))
+    assert rp.meta["sampler"] == "ddim:2"
+    rp = _resolve_quiet(api.PolicySpec(
+        "eat", options={"acfg": ACFG, "sampler": "ddim:2"},
+        sampler="ddim:3"))
+    assert rp.meta["sampler"] == "ddim:3"
+
+
+def test_distilled_needs_student_weights():
+    # fresh resolve injects an (untrained) student head
+    rp = _resolve_quiet(_eat_spec("distilled"))
+    assert "student" in rp.params and rp.trained is False
+    # explicit weights without one fail loudly
+    teacher = AG.init_actor(jax.random.PRNGKey(0), ECFG, ACFG)
+    with pytest.raises(ValueError, match="student"):
+        api.resolve(api.PolicySpec("eat", params=teacher,
+                                   options={"acfg": ACFG},
+                                   sampler="distilled"), ECFG)
+
+
+def _run_quiet(wl, exec_spec, spec, key):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", api.UntrainedPolicyWarning)
+        return api.Simulator(wl, exec_spec).run(spec, key)
+
+
+@pytest.mark.parametrize("sampler", ["ddim:2", "distilled"])
+def test_fast_samplers_run_through_simulator(sampler):
+    wl = api.WorkloadSpec.episodic(CELL, batch=3)
+    res = _run_quiet(wl, api.ExecSpec(), _eat_spec(sampler),
+                     jax.random.PRNGKey(0))
+    assert res.summary["sampler"] == sampler
+    assert np.isfinite(res.summary["mean_episode_return"])
+
+
+@pytest.mark.parametrize("sampler", ["ddim:2", "distilled"])
+def test_fast_sampler_deterministic_parity_fused_vs_serving(sampler):
+    """Deterministic serving (virtual time, mirror mode) is bitwise with
+    the fused backend under both fast samplers — the contract serving's
+    sampler swap relies on."""
+    wl = api.WorkloadSpec.streaming(CELL, streams=1, num_windows=2,
+                                    window_tasks=8, max_steps_per_window=16)
+    spec = _eat_spec(sampler, deterministic=True)
+    key = jax.random.PRNGKey(4)
+    rf = _run_quiet(wl, api.ExecSpec(backend="fused"), spec, key)
+    rs = _run_quiet(wl, api.ExecSpec(backend="serving",
+                                     serving_execute=False), spec, key)
+    skip = {"model_loads", "model_reuses", "tasks_executed", "wall_clock"}
+    for k, a in rf.summary.items():
+        if k in skip or isinstance(a, str):
+            continue
+        np.testing.assert_equal(rs.summary[k], a, err_msg=k)
+    assert rs.summary["sampler"] == sampler
+
+
+def test_stream_runner_swap_updates_program():
+    from repro.traffic import (PoissonArrivals, ProcessTaskSource,
+                               StreamConfig)
+    from repro.traffic.stream import StreamRunner
+    p_ddpm = ACT.actor_policy(ECFG, ACFG, deterministic=True)
+    p_ddim = ACT.actor_policy(ECFG, ACFG, deterministic=True,
+                              sampler="ddim:2")
+    params = AG.init_actor(jax.random.PRNGKey(0), ECFG, ACFG)
+    src = ProcessTaskSource(PoissonArrivals(0.05), TCFG,
+                            jax.random.PRNGKey(0), num_streams=2)
+    runner = StreamRunner(ECFG, p_ddpm, params, src, jax.random.PRNGKey(1),
+                          StreamConfig(num_streams=2,
+                                       max_steps_per_window=8))
+    assert runner.program.sampler == "ddpm"
+    assert runner.program is ACT.actor_program(ECFG, p_ddpm)
+    runner.run_window(policy=p_ddim)
+    assert runner.policy is p_ddim
+    assert runner.program is ACT.actor_program(ECFG, p_ddim)
+    assert runner.program.sampler == "ddim:2"
+
+
+# ------------------------------------------------------------ distillation
+def test_distill_reduces_loss_and_tracks_teacher():
+    from repro.training.distill import DistillConfig, distill_actor
+    teacher = AG.init_actor(jax.random.PRNGKey(0), ECFG, ACFG)
+    obs = jax.random.normal(jax.random.PRNGKey(1), (64,) + ECFG.obs_shape)
+    dcfg = DistillConfig(steps=300, batch=128, dataset=512, noise_per_obs=16,
+                         log_every=100)
+    params, hist = distill_actor(jax.random.PRNGKey(2), teacher, ECFG, ACFG,
+                                 dcfg, obs=obs)
+    assert "student" in params
+    assert params["denoiser"] is teacher["denoiser"]
+    assert hist[-1]["loss"] < 0.5 * hist[0]["loss"]
+
+    # the distilled policy's deterministic actions approach the teacher's
+    # PF-ODE (full-grid DDIM) endpoint on UNSEEN decision keys, far
+    # closer than an untrained student
+    sched = DF.vp_schedule(ACFG.T)
+    f_s = AG._encode(teacher, ACFG, ECFG, obs[0])
+    untrained = ACT.init_student(jax.random.PRNGKey(5), ECFG, ACFG)
+    errs, errs_fresh = [], []
+    for i in range(32):
+        kd = jax.random.fold_in(jax.random.PRNGKey(9), i)
+        want = SMP.chain_sample(teacher["denoiser"], sched, f_s, kd,
+                                ECFG.action_dim, kind="ddim", K=ACFG.T,
+                                impl="ref")
+        got = SMP.distilled_sample(params["student"], f_s, kd,
+                                   ECFG.action_dim, ACFG.T, impl="ref")
+        fresh = SMP.distilled_sample(untrained, f_s, kd, ECFG.action_dim,
+                                     ACFG.T, impl="ref")
+        errs.append(float(jnp.mean(jnp.abs(got - want))))
+        errs_fresh.append(float(jnp.mean(jnp.abs(fresh - want))))
+    assert np.mean(errs) < 0.6 * np.mean(errs_fresh)
+
+
+def test_distill_rejects_gaussian_teacher():
+    from repro.training.distill import distill_actor
+    gcfg = AG.AgentConfig(variant="eat-da", T=4)
+    teacher = AG.init_actor(jax.random.PRNGKey(0), ECFG, gcfg)
+    with pytest.raises(ValueError, match="Gaussian"):
+        distill_actor(jax.random.PRNGKey(1), teacher, ECFG, gcfg)
